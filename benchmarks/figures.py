@@ -1,0 +1,222 @@
+"""One benchmark per paper table/figure (§3 analysis + §8 end-to-end).
+
+Each function returns (rows, derived) where rows is a list of dicts and
+derived is the figure's headline number; run.py prints the CSV required by
+the harness contract.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Tuple
+
+from repro.configs import get_config
+from repro.core import AgentXPUEngine, WorkloadConfig, generate_workload
+from repro.core.annotation import INTEL_CORE_ULTRA_5_125H, annotate
+from repro.core.contention import co_execution_rates
+from repro.core.heg import HEG
+from repro.core.requests import Priority, Request
+
+HW = INTEL_CORE_ULTRA_5_125H
+CFG = get_config("llama3.2-3b")  # paper's evaluation model
+
+
+# -- §3.1 op-XPU affinity (paper's roofline study) ---------------------------
+def bench_op_affinity() -> Tuple[List[dict], float]:
+    """GEMM (token-level, chunkable) vs MHA (sequence-level) per XPU."""
+    rows = []
+    d = 4096
+    for k in (64, 256, 1024, 4096):
+        gemm = annotate(2 * k * d * d, d * d * 1.0 + 2 * k * d * 2, HW)
+        # GQA 32Q/8KV heads, head dim 128 as in the paper's study
+        mha = annotate(4 * k * k * 32 * 128, 2 * k * 8 * 128 * 2 + k * d * 2,
+                       HW, allow_npu=False)
+        # NPU JIT compilation overhead for dynamic attention (paper: amortized
+        # compile cost makes NPU-MHA uncompetitive -> t_npu None here already)
+        rows.append({
+            "k": k,
+            "gemm_tflops_npu": gemm.flops / gemm.t_npu / 1e12,
+            "gemm_tflops_igpu": gemm.flops / gemm.t_igpu / 1e12,
+            "gemm_tflops_per_w_npu": gemm.flops / gemm.energy_npu / 1e12,
+            "gemm_tflops_per_w_igpu": gemm.flops / gemm.energy_igpu / 1e12,
+            "mha_tflops_igpu": mha.flops / mha.t_igpu / 1e12,
+        })
+    # headline: NPU energy-efficiency advantage on chunked GEMM
+    adv = rows[1]["gemm_tflops_per_w_npu"] / rows[1]["gemm_tflops_per_w_igpu"]
+    return rows, adv
+
+
+# -- Fig 3: memory contention --------------------------------------------------
+def bench_contention() -> Tuple[List[dict], float]:
+    """Standalone vs co-executed GEMM/GEMV pairs (slowdown factors)."""
+    # fused op-group scale (a layer group's weights), as dispatched by the
+    # HEG — single 4k x 4k ops are overhead-diluted on both XPUs
+    d = 4096
+    n_fused = 16
+    gemm = annotate(2 * 4096 * d * d * n_fused, d * d * 1.0 * n_fused,
+                    HW)  # compute-bound
+    gemv = annotate(2 * 1 * d * d * n_fused, d * d * 1.0 * n_fused,
+                    HW)  # memory-bound
+    pairs = {
+        "gemm+gemm": (gemm.bw_util_npu, gemm.bw_util_igpu),
+        "gemm+gemv": (gemm.bw_util_npu, gemv.bw_util_igpu),
+        "gemv+gemm": (gemv.bw_util_npu, gemm.bw_util_igpu),
+        "gemv+gemv": (gemv.bw_util_npu, gemv.bw_util_igpu),
+    }
+    rows = []
+    for name, (b1, b2) in pairs.items():
+        r1, r2 = co_execution_rates([b1, b2])
+        rows.append({"pair": name, "slowdown_npu": 1 / r1,
+                     "slowdown_igpu": 1 / r2,
+                     "agg_throughput_gain": r1 + r2})
+        # paper Fig 3: parallel execution always beats standalone in
+        # aggregate, but GEMV latency suffers most
+        assert r1 + r2 > 1.0, name
+    worst = max(r["slowdown_igpu"] for r in rows)
+    gemmgemm = [r for r in rows if r["pair"] == "gemm+gemm"][0]
+    gemvgemv = [r for r in rows if r["pair"] == "gemv+gemv"][0]
+    assert gemvgemv["slowdown_igpu"] >= gemmgemm["slowdown_igpu"]
+    return rows, worst
+
+
+# -- §3.2 batching effects ------------------------------------------------------
+def bench_batching() -> Tuple[List[dict], float]:
+    heg = HEG(CFG, HW)
+    rows = []
+    t1 = heg.decode_step_ann(1, [512]).t_igpu
+    for b in (1, 2, 4, 8, 16):
+        td = heg.decode_step_ann(b, [512] * b).t_igpu
+        # batched prefill: b chunks back to back (prefill saturates the XPU)
+        tp = heg._linear_chunk_ann(heg.chunk_size, False).t_npu * b
+        rows.append({"batch": b, "decode_iter_ms": td * 1e3,
+                     "decode_latency_vs_b1": td / t1,
+                     "prefill_scaling": tp / (tp / b)})
+    # decode batch 8 should cost << 8x a single decode (weight-stream shared)
+    d8 = [r for r in rows if r["batch"] == 8][0]["decode_latency_vs_b1"]
+    return rows, d8
+
+
+# -- Fig 4: co-scheduling schemes ------------------------------------------------
+def bench_coscheduling() -> Tuple[List[dict], float]:
+    """One proactive (long prefill) + one reactive task under schemes a-d."""
+    # Fig 4's illustrated trace is prefill-dominated (long proactive prefill
+    # overlapping a reactive turn with short decodes)
+    reqs = [
+        Request(id=0, priority=Priority.PROACTIVE, prompt_len=2048,
+                max_new_tokens=16, arrival_time=0.0),
+        Request(id=1, priority=Priority.REACTIVE, prompt_len=512,
+                max_new_tokens=8, arrival_time=0.05),
+    ]
+    rows = []
+    for name in ("naive_preempt", "timeshare", "continuous_batching",
+                 "agent.xpu"):
+        m = AgentXPUEngine(CFG, scheduler=name).run_trace(
+            copy.deepcopy(reqs), max_time=10_000.0)
+        r = [x for x in m.completed if x.priority == Priority.REACTIVE][0]
+        p = [x for x in m.completed if x.priority == Priority.PROACTIVE][0]
+        rows.append({"scheme": name, "reactive_ttft": r.ttft,
+                     "reactive_e2e": r.e2e_latency,
+                     "proactive_e2e": p.e2e_latency,
+                     "makespan": m.sim_time,
+                     "recomputed_tokens": p.recomputed_tokens})
+    ax = [r for r in rows if r["scheme"] == "agent.xpu"][0]
+    others = [r for r in rows if r["scheme"] != "agent.xpu"]
+    # paper Fig 4(d): lowest reactive latency AND best work conserving
+    assert all(ax["reactive_ttft"] <= o["reactive_ttft"] * 1.05
+               for o in others)
+    assert ax["makespan"] <= min(o["makespan"] for o in others) * 1.05
+    return rows, ax["reactive_ttft"]
+
+
+# -- Fig 6: proactive-only throughput ---------------------------------------------
+def bench_proactive_only() -> Tuple[List[dict], float]:
+    """Max sustainable proactive rate per engine per workload: the paper's
+    1.6x-6.8x claim is Agent.xpu rate / llama.cpp-like FCFS rate."""
+    rows = []
+    gains = []
+    HORIZON = 80.0
+    for profile in ("proactivebench", "samsum", "cnn_dailymail"):
+        sustainable = {}
+        for name in ("agent.xpu", "fcfs"):
+            best = 0.0
+            for rate in (0.25, 0.5, 1.0, 2.0, 4.0):
+                wl = WorkloadConfig(proactive_rate=rate, horizon=HORIZON,
+                                    include_reactive=False, seed=11,
+                                    proactive_profile=profile)
+                reqs = generate_workload(wl)
+                m = AgentXPUEngine(CFG, scheduler=name).run_trace(
+                    copy.deepcopy(reqs), max_time=HORIZON * 4)
+                s = m.summary()
+                # sustainable: all drained within 1.5x horizon, bounded wait
+                drained = len(m.completed) == len(reqs) and \
+                    m.sim_time < HORIZON * 1.5
+                if drained and (s["proactive_e2e"] or 1e9) < 30.0:
+                    best = rate
+                else:
+                    break  # higher rates cannot be sustainable either
+            sustainable[name] = best
+        gain = sustainable["agent.xpu"] / max(sustainable["fcfs"], 0.25)
+        gains.append(gain)
+        rows.append({"workload": profile, **{f"rate_{k}": v for k, v
+                                             in sustainable.items()},
+                     "gain": gain})
+    return rows, max(gains)
+
+
+# -- Fig 7: mixed proactive-reactive ----------------------------------------------
+def bench_mixed() -> Tuple[List[dict], float]:
+    rows = []
+    ratios = []
+    for interval in (30.0, 15.0):
+        for rate in (0.25, 1.0, 2.0):
+            wl = WorkloadConfig(proactive_rate=rate,
+                                reactive_interval=interval,
+                                horizon=100.0, seed=7)
+            reqs = generate_workload(wl)
+            rec = {"interval": interval, "rate": rate}
+            for name in ("agent.xpu", "fcfs", "continuous_batching"):
+                m = AgentXPUEngine(CFG, scheduler=name).run_trace(
+                    copy.deepcopy(reqs), max_time=4_000.0)
+                s = m.summary()
+                rec[f"Rnorm_{name}"] = s["reactive_norm_latency"]
+                rec[f"Pe2e_{name}"] = s["proactive_e2e"]
+                rec[f"tok_s_{name}"] = s["tokens_per_s"]
+            rec["reactive_gain_vs_fcfs"] = (rec["Rnorm_fcfs"] or 0) / \
+                max(rec["Rnorm_agent.xpu"] or 1e-9, 1e-9)
+            ratios.append(rec["reactive_gain_vs_fcfs"])
+            rows.append(rec)
+    # paper: 4.6x average reactive latency reduction vs llama.cpp-like
+    avg_gain = sum(ratios) / len(ratios)
+    return rows, avg_gain
+
+
+# -- ablation: each Agent.xpu mechanism toggled off ---------------------------
+def bench_ablation() -> Tuple[List[dict], float]:
+    """Paper-style ablation: contribution of each §6 mechanism under a
+    reactive-heavy mixed load (MTRAG 1.5k-token reactive prompts every ~8 s
+    + proactive 2/s) where backfill/offload decisions actually bind."""
+    wl = WorkloadConfig(proactive_rate=2.0, reactive_interval=8.0,
+                        reactive_profile="mtrag", horizon=120.0, seed=9)
+    base_reqs = generate_workload(wl)
+    variants = {
+        "full": {},
+        "no_backfill": {"enable_backfill": False},
+        "no_contention_gate": {"enable_contention": False},
+        "no_reactive_offload": {"reactive_offload": False},
+        "no_aging": {"starvation_threshold": 1e9},
+    }
+    rows = []
+    for name, kw in variants.items():
+        m = AgentXPUEngine(CFG, scheduler="agent.xpu", **kw).run_trace(
+            copy.deepcopy(base_reqs), max_time=4000.0)
+        s = m.summary()
+        rows.append({"variant": name,
+                     "reactive_norm_latency": s["reactive_norm_latency"],
+                     "proactive_e2e": s["proactive_e2e"],
+                     "tokens_per_s": s["tokens_per_s"],
+                     "npu_util": s["npu_util"],
+                     "igpu_util": s["igpu_util"]})
+    full = rows[0]
+    worst_tok = min(r["tokens_per_s"] for r in rows[1:])
+    rel = {r["variant"]: (r["reactive_norm_latency"], r["tokens_per_s"])
+           for r in rows}
+    return rows, full["tokens_per_s"] / max(worst_tok, 1e-9)

@@ -1,0 +1,67 @@
+"""§Roofline report: reads the dry-run artifacts and emits the per
+(arch x shape) three-term table (compute / memory / collective seconds,
+dominant term, MODEL_FLOPS/HLO_FLOPs ratio) — single-pod mesh.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(mesh: str = "16x16") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(mesh: str = "16x16") -> Tuple[List[dict], float]:
+    rows = []
+    for r in load(mesh):
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "reason": r["reason"][:40]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("status")})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": rl["t_compute"], "t_memory_s": rl["t_memory"],
+            "t_collective_s": rl["t_collective"],
+            "dominant": rl["dominant"],
+            "useful_flops_ratio": rl.get("useful_flops_ratio"),
+            "coll_bytes_per_chip": r["collective_bytes_per_chip"],
+        })
+    ok = [x for x in rows if x.get("status") == "ok"]
+    derived = sum(1 for x in ok if x["dominant"] == "t_collective") / \
+        max(len(ok), 1)
+    return rows, derived
+
+
+def print_table(mesh: str = "16x16"):
+    rows, frac = table(mesh)
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>13s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r.get('status'):>9s}")
+            continue
+        u = r["useful_flops_ratio"]
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['t_compute_s']:9.3g} {r['t_memory_s']:9.3g} "
+              f"{r['t_collective_s']:9.3g} {r['dominant']:>13s} "
+              f"{u if u is None else round(u, 3)!s:>7s}")
+    print(f"collective-dominant fraction: {frac:.2f}")
+
+
+if __name__ == "__main__":
+    print_table()

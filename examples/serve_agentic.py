@@ -1,0 +1,71 @@
+"""End-to-end agentic serving driver (deliverable (b)): a mixed
+proactive/reactive trace served with REAL batched token generation under the
+Agent.xpu scheduler, with per-class latency/throughput report.
+
+    PYTHONPATH=src python examples/serve_agentic.py --n-proactive 6
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core.engine import RealAgentXPUEngine
+from repro.core.requests import Priority, Request
+from repro.models import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b",
+                    help="any assigned arch (tiny variant is served)")
+    ap.add_argument("--n-proactive", type=int, default=6)
+    ap.add_argument("--out-tokens", type=int, default=12)
+    ap.add_argument("--scheduler", default="agent.xpu")
+    args = ap.parse_args()
+
+    cfg = get_tiny_config(args.arch)
+    if cfg.frontend != "none" or cfg.is_encoder_decoder:
+        raise SystemExit("pick a text-only arch for this example")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    print(f"serving tiny {args.arch} ({cfg.num_params()/1e6:.1f}M) "
+          f"with {args.scheduler}")
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.n_proactive):
+        plen = int(rng.integers(24, 96))
+        reqs.append(Request(
+            id=i, priority=Priority.PROACTIVE, prompt_len=plen,
+            max_new_tokens=args.out_tokens, arrival_time=i * 0.01,
+            tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+    # the user interrupts mid-stream
+    plen = 48
+    reqs.append(Request(
+        id=len(reqs), priority=Priority.REACTIVE, prompt_len=plen,
+        max_new_tokens=args.out_tokens, arrival_time=0.08,
+        tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+
+    eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
+                             max_len=256)
+    m = eng.serve(reqs)
+    s = m.summary()
+    print(f"\ncompleted {len(m.completed)} requests "
+          f"(sim time {m.sim_time:.2f}s)")
+    for r in sorted(m.completed, key=lambda r: r.id):
+        toks = eng.output_tokens(r.id)
+        print(f"  req {r.id} [{r.priority.name:9s}] ttft={r.ttft*1e3:7.1f}ms "
+              f"e2e={r.e2e_latency:6.3f}s preempts={r.preempt_count} "
+              f"tokens={toks[:6]}...")
+    print(f"\nreactive TTFT       : {s['reactive_ttft']*1e3:.1f} ms")
+    print(f"proactive mean e2e  : {s['proactive_e2e']:.3f} s")
+    print(f"energy              : {s['energy_j_per_token']:.2f} J/token")
+
+
+if __name__ == "__main__":
+    main()

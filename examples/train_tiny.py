@@ -1,0 +1,19 @@
+"""Train any assigned architecture's tiny variant end-to-end (with
+checkpoint/resume), e.g. the MoE or the RWKV6 family:
+
+    PYTHONPATH=src python examples/train_tiny.py --arch rwkv6-1.6b --steps 100
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--tiny" not in argv:
+        argv = argv + ["--tiny"]
+    if not any(a.startswith("--ckpt-dir") for a in argv):
+        argv += ["--ckpt-dir", "/tmp/repro_ckpt"]
+    main(argv)

@@ -1,0 +1,49 @@
+"""Memory-pressure estimation and the NPU-iGPU contention model (paper §6.4).
+
+P_mem(t) = sum over active kernels of BW_k / BW_peak.  When the combined
+demand exceeds the shared DDR/HBM bandwidth, each kernel's progress rate
+drops in proportion to its own memory-boundness — memory-bound GEMV-like
+kernels suffer, compute-bound GEMM-like kernels barely notice (the paper's
+Fig. 3 ordering).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+
+class MemoryPressureEstimator:
+    """Tracks aggregate bandwidth utilization of active kernels."""
+
+    def __init__(self):
+        self._active: Dict[str, float] = {}
+
+    def add(self, key: str, bw_util: float):
+        self._active[key] = bw_util
+
+    def remove(self, key: str):
+        self._active.pop(key, None)
+
+    @property
+    def pressure(self) -> float:
+        return sum(self._active.values())
+
+
+def co_execution_rates(bw_utils: Iterable[float]) -> list:
+    """Progress-rate multiplier for each concurrently-running kernel.
+
+    total <= 1: bandwidth uncontended, everyone runs at standalone speed.
+    total > 1: the shared bus saturates; kernel i's achieved bandwidth is
+    scaled by 1/total, slowing it by a factor interpolated by its own
+    memory-boundness m_i ~ bw_util_i (a fully compute-bound kernel has
+    bw_util ~ 0 and is unaffected).
+    """
+    bw = list(bw_utils)
+    total = sum(bw)
+    if total <= 1.0:
+        return [1.0] * len(bw)
+    rates = []
+    for b in bw:
+        m = min(b, 1.0)  # memory-bound fraction proxy
+        slowdown = 1.0 + m * (total - 1.0)
+        rates.append(1.0 / slowdown)
+    return rates

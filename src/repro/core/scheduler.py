@@ -1,0 +1,374 @@
+"""Online workload-aware scheduler (paper §6).
+
+Dual-queue architecture, kernel-level preemption, slack-aware backfill,
+ETC/aging resumption, and the memory-pressure three-tier dispatch of
+Algorithm 1.  The scheduler is execution-agnostic: the discrete-event
+simulator (core.simulator) and the real executor (core.engine) both drive it
+through three callbacks:
+
+    on_arrival(req, now)
+    on_complete(running, now)
+    next_dispatch(now) -> [RunningKernel to start]
+
+A ``RunningKernel`` is either one HEG kernel of one request or a batched
+decode iteration (the iGPU dynamic kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.contention import MemoryPressureEstimator
+from repro.core.heg import HEG, HEGNode, KernelKind
+from repro.core.preemption import ReqContext
+from repro.core.requests import Priority, ReqState, Request
+
+
+@dataclasses.dataclass
+class RunningKernel:
+    lane: str
+    node: HEGNode  # representative node (decode: the batch node)
+    req_ids: List[int]
+    t_standalone: float
+    bw_util: float
+    energy: float
+    started: float = 0.0
+    work_done: float = 0.0  # standalone-seconds of progress
+    is_decode_batch: bool = False
+
+    @property
+    def remaining(self) -> float:
+        return max(self.t_standalone - self.work_done, 0.0)
+
+
+class SchedulerBase:
+    """Shared machinery: queues, contexts, decode set, metric hooks."""
+
+    name = "base"
+    lanes = ("npu", "igpu")
+
+    def __init__(self, heg: HEG, *, b_max: Optional[int] = None):
+        self.heg = heg
+        self.hw = heg.hw
+        self.rt_queue: deque = deque()  # reactive req ids
+        self.be_queue: deque = deque()  # proactive req ids (prefill pending)
+        self.ctx: Dict[int, ReqContext] = {}
+        self.decode_ready: List[int] = []
+        self.running: Dict[str, Optional[RunningKernel]] = {
+            ln: None for ln in self.lanes}
+        self.pressure = MemoryPressureEstimator()
+        self.b_max = b_max or heg.B_max
+        self.done: List[Request] = []
+
+    # -- request lifecycle ---------------------------------------------------
+    def on_arrival(self, req: Request, now: float):
+        c = ReqContext.build(req, self.heg)
+        self.ctx[req.id] = c
+        req.state = ReqState.QUEUED
+        req.last_enqueue_t = now
+        if req.priority == Priority.REACTIVE:
+            self.rt_queue.append(req.id)
+        else:
+            self.be_queue.append(req.id)
+
+    def _finish_prefill(self, req: Request, now: float):
+        req.prefill_done_t = now
+        req.decoded = 1  # prefill emits the first token
+        req.state = ReqState.DECODE
+        if req.decoded >= req.max_new_tokens:
+            self._finish(req, now)
+        else:
+            self.decode_ready.append(req.id)
+
+    def _finish(self, req: Request, now: float):
+        req.state = ReqState.DONE
+        req.finish_t = now
+        self.done.append(req)
+        self.ctx.pop(req.id, None)
+
+    def on_complete(self, rk: RunningKernel, now: float):
+        self.running[rk.lane] = None
+        if rk.is_decode_batch:
+            for rid in rk.req_ids:
+                c = self.ctx.get(rid)
+                if c is None:
+                    continue
+                c.req.decoded += 1
+                if c.req.decoded >= c.req.max_new_tokens:
+                    if rid in self.decode_ready:
+                        self.decode_ready.remove(rid)
+                    self._finish(c.req, now)
+            return
+        rid = rk.req_ids[0]
+        c = self.ctx.get(rid)
+        if c is None:
+            return
+        c.complete(rk.node)
+        if c.prefill_done and c.req.state in (ReqState.PREFILL,
+                                              ReqState.QUEUED,
+                                              ReqState.PREEMPTED):
+            self._finish_prefill(c.req, now)
+
+    # -- helpers -------------------------------------------------------------
+    def _mk_running(self, node: HEGNode, lane: str) -> RunningKernel:
+        t = node.time_on(lane)
+        assert t is not None, (node.kind, lane)
+        e = node.ann.energy_npu if lane == "npu" else node.ann.energy_igpu
+        return RunningKernel(lane=lane, node=node, req_ids=[node.req_id],
+                             t_standalone=t, bw_util=node.ann.bw_util_on(lane),
+                             energy=e or 0.0)
+
+    def _mk_decode_batch(self, rids: List[int], lane: str = "igpu"
+                         ) -> RunningKernel:
+        kv_lens = []
+        for rid in rids:
+            r = self.ctx[rid].req
+            kv_lens.append(r.prompt_len + r.decoded)
+        ann = self.heg.decode_step_ann(len(rids), kv_lens)
+        node = HEGNode(kind=KernelKind.DECODE_STEP, layer=-1, chunk_idx=-1,
+                       tokens=len(rids), ann=ann, elastic=False)
+        return RunningKernel(lane=lane, node=node, req_ids=list(rids),
+                             t_standalone=ann.time_on(lane),
+                             bw_util=ann.bw_util_on(lane),
+                             energy=ann.energy_igpu or 0.0,
+                             is_decode_batch=True)
+
+    def _start(self, rk: RunningKernel, now: float) -> RunningKernel:
+        rk.started = now
+        self.running[rk.lane] = rk
+        if not rk.is_decode_batch:
+            c = self.ctx[rk.req_ids[0]]
+            c.start(rk.node)
+            if c.req.state == ReqState.QUEUED:
+                c.req.state = ReqState.PREFILL
+        return rk
+
+    def _reactive_active(self) -> Optional[ReqContext]:
+        for rid in self.rt_queue:
+            c = self.ctx.get(rid)
+            if c and not c.prefill_done:
+                return c
+        return None
+
+    def _prune_queues(self):
+        self.rt_queue = deque(r for r in self.rt_queue if r in self.ctx
+                              and not self.ctx[r].prefill_done)
+        self.be_queue = deque(r for r in self.be_queue if r in self.ctx
+                              and not self.ctx[r].prefill_done)
+
+    # subclasses implement
+    def next_dispatch(self, now: float) -> List[RunningKernel]:
+        raise NotImplementedError
+
+
+class AgentXpuScheduler(SchedulerBase):
+    """The paper's scheduler: scheme (d) with all mechanisms enabled."""
+
+    name = "agent.xpu"
+
+    def __init__(self, heg: HEG, *, b_max=None, enable_backfill: bool = True,
+                 enable_contention: bool = True, tau_low: float = 0.4,
+                 tau_high: float = 0.7, starvation_threshold: float = 30.0,
+                 reactive_offload: bool = True):
+        super().__init__(heg, b_max=b_max)
+        self.enable_backfill = enable_backfill
+        self.enable_contention = enable_contention
+        self.tau_low = tau_low
+        self.tau_high = tau_high
+        self.starvation_threshold = starvation_threshold
+        self.reactive_offload = reactive_offload
+        self._bf_used = 0.0  # micro-backfill budget since last decode
+
+    # -- Algorithm 1: memory-aware dispatch gate -----------------------------
+    def _gate(self, cand: RunningKernel, now: float, reactive: bool) -> bool:
+        if not self.enable_contention:
+            return True
+        others = [rk.bw_util for rk in self.running.values() if rk]
+        if not others:
+            return True  # empty SoC: WaitForSlot would deadlock, just run
+        if self._reactive_active() is None and not any(
+                rk and any(self.ctx[r].req.priority == Priority.REACTIVE
+                           for r in rk.req_ids if r in self.ctx)
+                for rk in self.running.values()):
+            # proactive-only regime: co-execution always raises throughput
+            # (paper Fig. 3) — the pressure tiers protect *reactive* latency
+            return True
+        # §6.4 kernel reordering: compute-intensive kernels are
+        # preferentially overlapped (the paper's flagship backfill pair is
+        # proactive NPU prefill under reactive iGPU decode)...
+        if cand.bw_util < 0.35:
+            return True
+        # ...while memory-intensive kernels are separated temporally
+        p_new = sum(others) + cand.bw_util
+        if p_new > self.tau_high:
+            return reactive  # high pressure: serialize, reactive only
+        if p_new > self.tau_low and not reactive:
+            return False  # medium: memory-heavy best-effort must wait
+        return True
+
+    def _duration_ok(self, cand: RunningKernel, now: float) -> bool:
+        """§6.3 duration constraint: best-effort work must fit inside the
+        running reactive kernel's execution window — a reactive prefill needs
+        the iGPU back every linear-kernel interval for its attention, so any
+        best-effort kernel longer than that window would stall the pipeline
+        once per layer."""
+        ra = self._reactive_active()
+        if ra is None:
+            return True
+        windows = [rk.remaining for rk in self.running.values()
+                   if rk and rk.req_ids and rk.req_ids[0] == ra.req.id]
+        window = max(windows) if windows else 0.005
+        return cand.t_standalone <= max(window, 0.005) * 1.5
+
+    # -- dispatch -------------------------------------------------------------
+    def next_dispatch(self, now: float) -> List[RunningKernel]:
+        self._prune_queues()
+        out: List[RunningKernel] = []
+        reactive = self._reactive_active()
+
+        # NPU lane: reactive prefill first, then proactive prefill (backfill)
+        if self.running["npu"] is None:
+            rk = self._pick_prefill(now, lane="npu", reactive_first=True)
+            if rk is not None:
+                out.append(self._start(rk, now))
+
+        # iGPU lane priority order (paper §6.1 task dispatch):
+        # 1) reactive dynamic kernels (attention)
+        # 2) reactive elastic chunk offload (prefill on both XPUs)
+        # 3) decode batch (reactive decode never waits; proactive joins)
+        # 4) proactive dynamic kernels / elastic chunks (inter-XPU backfill)
+        if self.running["igpu"] is None:
+            rk = self._pick_igpu(now, reactive)
+            if rk is not None:
+                out.append(self._start(rk, now))
+        return out
+
+    def _pick_prefill(self, now: float, *, lane: str, reactive_first: bool
+                      ) -> Optional[RunningKernel]:
+        order: List[int] = []
+        if reactive_first:
+            order += [r for r in self.rt_queue]
+        # §6.2 resumption priority for best-effort prefill
+        bes = sorted(
+            (r for r in self.be_queue),
+            key=lambda r: -self.ctx[r].resume_priority(
+                now, self.heg, starvation_threshold=self.starvation_threshold))
+        order += bes
+        for rid in order:
+            c = self.ctx.get(rid)
+            if c is None or c.prefill_done:
+                continue
+            is_reactive = c.req.priority == Priority.REACTIVE
+            for node in c.ready_kernels():
+                if lane == "npu" and not node.elastic:
+                    continue  # dynamic kernels cannot run on the NPU
+                cand = self._mk_running(node, lane)
+                if not is_reactive and not self._duration_ok(cand, now):
+                    continue
+                if not is_reactive and not self.enable_backfill \
+                        and self._reactive_active() is not None:
+                    continue
+                if self._gate(cand, now, is_reactive):
+                    if c.preempted_at is not None:
+                        c.resumed_at = now
+                        c.preempted_at = None
+                    return cand
+        return None
+
+    def _pick_igpu(self, now: float, reactive: Optional[ReqContext]
+                   ) -> Optional[RunningKernel]:
+        # 1) reactive dynamic kernel / 2) reactive elastic offload
+        if reactive is not None:
+            npu_busy_with_reactive = (
+                self.running["npu"] is not None and
+                self.running["npu"].req_ids[0] == reactive.req.id)
+            for node in reactive.ready_kernels():
+                if not node.elastic:
+                    return self._mk_running(node, "igpu")
+                if self.reactive_offload and npu_busy_with_reactive:
+                    return self._mk_running(node, "igpu")
+
+        # 3) decode batch at iteration boundary (intra-XPU backfill: pending
+        #    proactive decodes join without disturbing reactive latency).
+        #    A purely-proactive iteration is best-effort work and must obey
+        #    the §6.3 duration constraint while a reactive prefill pipelines
+        #    through the iGPU (one ATTN_DYN per layer).
+        # 4) inter-XPU backfill: proactive dynamic / elastic kernels.
+        # Ordering between 3 and 4 is throughput-driven (§6.2: low-ETC tasks
+        # enter the decode pipeline early to keep the batch full): while the
+        # decode batch is underfull, finishing prefills beats burning a full
+        # weight-stream iteration on one or two tokens.
+        rids = self._form_decode_batch() if self.decode_ready else []
+        has_reactive_decode = any(
+            self.ctx[r].req.priority == Priority.REACTIVE for r in rids)
+        batch_underfull = (not has_reactive_decode
+                           and len(rids) < max(2, self.b_max // 2))
+
+        def try_decode():
+            if not rids:
+                return None
+            cand = self._mk_decode_batch(rids)
+            ok = has_reactive_decode or self._duration_ok(cand, now)
+            if ok and self._gate(cand, now, has_reactive_decode):
+                self._bf_used = 0.0  # reset the micro-backfill budget
+                return cand
+            return None
+
+        def try_backfill():
+            # "backfill" = co-scheduling best-effort work WITH reactive; a
+            # free iGPU with no reactive task is ordinary dispatch
+            if not self.enable_backfill and \
+                    self._reactive_active() is not None:
+                return None
+            return self._pick_prefill(now, lane="igpu", reactive_first=False)
+
+        def try_micro_backfill():
+            # structural-slack repair: short best-effort kernels (prefill
+            # ATTN_DYN etc.) squeeze between decode iterations within a
+            # bounded time budget, so NPU-side prefill pipelines never starve
+            # on their iGPU dependencies while decodes loop.
+            if not rids or (not self.enable_backfill and
+                            self._reactive_active() is not None):
+                return None
+            est = self._mk_decode_batch(rids).t_standalone
+            cand = try_backfill()
+            if cand is None:
+                return None
+            if self._bf_used + cand.t_standalone <= 0.15 * est:
+                self._bf_used += cand.t_standalone
+                return cand
+            return None
+
+        order = (try_backfill, try_decode) if batch_underfull \
+            else (try_micro_backfill, try_decode, try_backfill)
+        for fn in order:
+            rk = fn()
+            if rk is not None:
+                return rk
+        return None
+
+    def _form_decode_batch(self) -> List[int]:
+        """Reactive decodes always join; fill with proactive up to B_max,
+        preferring power efficiency (shorter remaining output first)."""
+        rts = [r for r in self.decode_ready
+               if self.ctx[r].req.priority == Priority.REACTIVE]
+        bes = [r for r in self.decode_ready
+               if self.ctx[r].req.priority == Priority.PROACTIVE]
+        bes.sort(key=lambda r: self.ctx[r].req.max_new_tokens
+                 - self.ctx[r].req.decoded)
+        return (rts + bes)[:self.b_max]
+
+    # -- preemption (kernel boundary; §6.2) -----------------------------------
+    def on_arrival(self, req: Request, now: float):
+        super().on_arrival(req, now)
+        if req.priority == Priority.REACTIVE:
+            # mark running best-effort prefill as preempted; their current
+            # kernel completes (no mid-kernel abort), context checkpointed
+            for rid, c in self.ctx.items():
+                if c.req.priority == Priority.PROACTIVE \
+                        and c.req.state == ReqState.PREFILL:
+                    c.req.state = ReqState.PREEMPTED
+                    c.req.preempt_count += 1
+                    c.preempted_at = now

@@ -1,0 +1,103 @@
+"""Pallas TPU single-token decode attention over a ring-buffer KV cache.
+
+The decode hot spot is memory-bound: each step streams the whole cache once.
+Grid (B, Hkv, n_kv): all G query heads of one KV group are processed together
+so the cache tile (block_k, hd) is read once per group, not once per query
+head — the GQA bandwidth saving the cache layout exists for.  Online-softmax
+state (m, l, acc) is VMEM scratch carried across kv tiles; slot validity
+comes from the ``slot_pos`` ring-buffer positions (-1 = empty), which also
+encodes causality and the sliding window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_k, n_kv, window, scale, G):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bk)
+
+    cur = cur_pos_ref[pl.program_id(0)]  # this batch element's position
+    slot = pos_ref[0]  # (bk,) absolute positions of the cache slots
+    ok = (slot >= 0) & (slot <= cur)
+    if window is not None:
+        ok &= slot > cur - window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
+                     block_k=512, interpret=False):
+    """q: (B, Hq, hd); caches: (B, S, Hkv, hd); slot_pos: (B, S) int32;
+    cur_pos: (B,) int32.  Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    n_kv = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    # layout: group q by kv head -> (B, Hkv, G, hd); caches head-major
+    qg = q.reshape(B, Hkv, G, hd)
+    kc = jnp.swapaxes(k_cache, 1, 2)  # (B, Hkv, S, hd)
+    vc = jnp.swapaxes(v_cache, 1, 2)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, n_kv=n_kv,
+                               window=window, scale=scale, G=G)
+    grid = (B, Hkv, n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # cur_pos (B,) scalars
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="decode_attention",
+    )(cur_pos.astype(jnp.int32), qg, kc, vc, slot_pos)
+    return out.reshape(B, Hq, hd)

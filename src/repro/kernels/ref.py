@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately naive: direct softmax, per-timestep recurrences — O(S^2) memory
+is fine at test sizes and leaves no room for shared bugs with the kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, pos_base=0):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) — direct softmax."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    pos_q = pos_base + jnp.arange(Sq)
+    pos_k = pos_base + jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        ok &= pos_k[None, :] > pos_q[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_pos, cur_pos, *,
+                         window=None):
+    """q: (B, Hq, hd); caches: (B, S, Hkv, hd)."""
+    B, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    kc = jnp.repeat(jnp.swapaxes(k_cache, 1, 2), G, axis=1)  # (B,Hq,S,hd)
+    vc = jnp.repeat(jnp.swapaxes(v_cache, 1, 2), G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / (hd ** 0.5)
+    ok = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window is not None:
+        ok &= slot_pos > cur_pos[:, None] - window
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      vc.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w_log, u, state0=None):
+    """Per-timestep WKV6.  r/k/v/w_log: (BH, S, D); u: (BH, 1, D).
+
+    Returns (out (BH, S, D), final_state (BH, D, D) f32)."""
+    BH, S, D = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w_log.astype(jnp.float32)
+    uf = u.astype(jnp.float32)[:, 0, :]  # (BH, D)
+    if state0 is None:
+        state0 = jnp.zeros((BH, D, D), jnp.float32)
+
+    def step(S_, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], wf[:, t]
+        kv = kt[:, :, None] * vt[:, None, :]  # (BH, D, D)
+        out = jnp.einsum("bd,bde->be", rt, S_ + uf[:, :, None] * kv)
+        S2 = S_ * jnp.exp(wt)[:, :, None] + kv
+        return S2, out
+
+    S_fin, outs = jax.lax.scan(step, state0, jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), S_fin
+
+
+def rglru_scan_ref(x, a_log, gate, h0):
+    """Per-timestep RG-LRU.  x/a_log/gate: (B, S, W); h0: (B, W) f32."""
+    a = jnp.exp(a_log.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * (
+        gate.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    h_fin, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                             jnp.arange(x.shape[1]))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h_fin
+
+
+def moe_gemm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+The two lines above MUST stay the first statements of this module — jax locks
+the device count on first initialization, and the dry-run (and only the
+dry-run) needs 512 placeholder host devices for the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Artifacts (JSON per combination) feed EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, input_specs, shape_supported
+from repro.models.params import batch_pspec, cache_pspecs, param_pspecs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# -- TPU v5e-class hardware constants (per chip) ----------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of an HLO result type, e.g. '(bf16[8,128]{1,0}, f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective bytes by op kind, parsed from the SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-typed op lines look like:  %x = bf16[..]{..} all-gather(...)
+        m = re.match(r"[%\w\.\-]*\s*=\s*(\([^)]*\)|[\w\[\]\{\},:\s]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def _opt_pspecs(opt_spec, pspecs):
+    """AdamWState(step, m, v) sharded like the params."""
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=jax.tree_util.tree_map(
+        lambda s: s, pspecs))
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, serve_sharding: bool = False,
+               q_chunk: int = 512, kv_chunk: int = 512,
+               remat="full", capacity_factor: float = 1.25) -> dict:
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256}
+    okay, reason = shape_supported(cfg, shape_name)
+    if not okay:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    batch_axes = batch_pspec(mesh, SHAPES[shape_name].global_batch, 1)[0]
+    step_fn, args = input_specs(cfg, shape_name, batch_axes=batch_axes,
+                                tp_axis="model", q_chunk=q_chunk,
+                                kv_chunk=kv_chunk,
+                                remat="dots" if remat == "dots" else True,
+                                capacity_factor=capacity_factor)
+    pspecs = param_pspecs(args[0], mesh,
+                          fsdp="off" if serve_sharding else "auto")
+    rec["serve_sharding"] = serve_sharding
+    rec["q_chunk"] = q_chunk
+    rec["kv_chunk"] = kv_chunk
+
+    if shape.kind == "train":
+        p_spec, opt_spec, batch = args
+        bspec = {k: batch_pspec(mesh, shape.global_batch, len(v.shape))
+                 for k, v in batch.items()}
+        in_shardings = (pspecs, _opt_pspecs(opt_spec, pspecs), bspec)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        tok_spec = batch_pspec(mesh, shape.global_batch, 2)
+        in_shardings = (pspecs, tok_spec)
+        if len(args) == 3:
+            in_shardings += (batch_pspec(mesh, shape.global_batch, 3),)
+        donate = ()
+    else:
+        p_spec, cache_spec, _tok = args
+        cspecs = cache_pspecs(cache_spec, mesh, shape.global_batch)
+        in_shardings = (pspecs, cspecs,
+                        batch_pspec(mesh, shape.global_batch, 2))
+        donate = (1,)
+
+    # materialize PartitionSpecs as NamedShardings on the production mesh
+    in_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), in_shardings,
+        is_leaf=lambda s: isinstance(s, P))
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_rec = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and
+                    k in ("flops", "bytes accessed", "transcendentals",
+                          "optimal_seconds")}
+    except Exception as e:
+        cost_rec = {"error": str(e)}
+
+    # recursive HLO accounting (cost_analysis does not expand while loops)
+    from repro.launch.hlocost import hlo_cost
+    hlo = compiled.as_text()
+    hc = hlo_cost(hlo)  # per-partition (SPMD program of one chip)
+
+    # analytic model flops (global): 6*N_active*D train, 2*N_active*D forward
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6 if shape.kind == "train" else 2) \
+        * cfg.active_params() * tokens
+
+    rec.update(status="ok", lower_s=round(t_lower, 2),
+               compile_s=round(t_compile, 2), memory=mem_rec,
+               cost_analysis_raw=cost_rec,
+               hlo_flops_per_chip=hc["flops"],
+               hlo_bytes_per_chip=hc["bytes"],
+               collectives=hc["collectives"],
+               collective_bytes_per_chip=hc["collective_total"],
+               collective_count=hc["collective_count"],
+               model_flops_global=model_flops,
+               hlo_lines=hlo.count("\n"))
+
+    rec["roofline"] = {
+        "t_compute": hc["flops"] / PEAK_FLOPS,
+        "t_memory": hc["bytes"] / HBM_BW,
+        "t_collective": hc["collective_total"] / ICI_BW,
+    }
+    dom = max(rec["roofline"], key=rec["roofline"].get)
+    rec["roofline"]["dominant"] = dom
+    rec["roofline"]["useful_flops_ratio"] = (
+        model_flops / (hc["flops"] * rec["chips"])
+        if hc["flops"] else None)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"compile {t_compile:.1f}s  flops/chip {hc['flops']:.3e}  "
+              f"bytes/chip {hc['bytes']:.3e}  "
+              f"coll {hc['collective_total']:.3e}B  dom={dom}  "
+              f"useful={rec['roofline']['useful_flops_ratio']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--serve-sharding", action="store_true",
+                    help="no-FSDP weight layout (serving)")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=512)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    tag += "_" + args.tag
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=mp,
+                                     serve_sharding=args.serve_sharding,
+                                     q_chunk=args.q_chunk,
+                                     kv_chunk=args.kv_chunk,
+                                     remat=args.remat,
+                                     capacity_factor=args.capacity_factor)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                           "traceback": traceback.format_exc()}
+                    failures.append(tag)
+                    print(f"[dryrun] FAILED {tag}\n{rec['traceback']}",
+                          flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("[dryrun] all combinations OK")
+
+
+if __name__ == "__main__":
+    main()

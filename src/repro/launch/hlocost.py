@@ -1,0 +1,366 @@
+"""Recursive cost accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts a ``while`` body once,
+so anything under ``jax.lax.scan`` (the whole layer stack, attention chunk
+loops, ...) is massively under-counted.  This module re-derives
+
+    flops              (dot ops; 2*M*N*K convention)
+    bytes accessed     (operands + results of top-level ops; fusions count
+                        their boundary only, matching XLA's semantics)
+    collective bytes   (all-gather / all-reduce / reduce-scatter /
+                        all-to-all / collective-permute, by kind)
+
+by parsing the post-SPMD HLO, recursing through fusion/call/while/conditional
+and multiplying ``while`` bodies by their trip count (recovered from the loop
+condition's integer constant — exact for lax.scan/map/fori loops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(elements, bytes) of a possibly-tuple HLO shape string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_ATOM.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_ATOM.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str]  # op name -> result shape string
+
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]\{\}, ]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+                # computation parameters appear in the header; they are also
+                # declared as `parameter(n)` ops inside, so nothing to do.
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        # operands: first parenthesized group (up to matching paren, flat scan)
+        depth = 1
+        i = 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest[:i - 1]
+        attrs = rest[i:]
+        operands = [o.strip().lstrip("%") for o in _split_top(operand_str)]
+        cur.ops.append(Op(name, shape, opcode, operands, attrs,
+                          is_root=line.startswith("ROOT")))
+        cur.symbols[name] = shape
+    return comps, entry
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf and "".join(buf).strip():
+        out.append("".join(buf))
+    return [x.strip() for x in out if x.strip()]
+
+
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = shape_elems_bytes(op.shape)
+    lhs = op.operands[0] if op.operands else None
+    lhs_shape = comp.symbols.get(lhs, "")
+    dims = shape_dims(lhs_shape)
+    m = _CONTRACT.search(op.attrs)
+    k = 1
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d:
+                k *= dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_INT_CONST = re.compile(r"constant\((\d+)\)")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "copy-start", "copy-done", "after-all"}
+
+
+def trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (exact for lax loops)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant" and op.shape.strip().startswith("s32[]"):
+            for o in op.operands:
+                if o.isdigit():
+                    best = max(best, int(o))
+    return best
+
+
+class CostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[str, dict] = {}
+
+    def cost(self) -> dict:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        c = self._comp_cost(self.entry)
+        c = dict(c)
+        c["collective_total"] = sum(c["collectives"].values())
+        return c
+
+    def _comp_cost(self, name: str) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        zero = {"flops": 0.0, "bytes": 0.0,
+                "collectives": {k: 0.0 for k in COLLECTIVE_KINDS},
+                "collective_count": 0.0}
+        if comp is None:
+            self._memo[name] = zero
+            return zero
+        total = {"flops": 0.0, "bytes": 0.0,
+                 "collectives": {k: 0.0 for k in COLLECTIVE_KINDS},
+                 "collective_count": 0.0}
+
+        def add(sub: dict, mult: float = 1.0):
+            total["flops"] += sub["flops"] * mult
+            total["bytes"] += sub["bytes"] * mult
+            total["collective_count"] += sub["collective_count"] * mult
+            for k in COLLECTIVE_KINDS:
+                total["collectives"][k] += sub["collectives"][k] * mult
+
+        for op in comp.ops:
+            kind = op.opcode.replace("-start", "") \
+                if op.opcode.endswith("-start") else op.opcode
+            if kind in COLLECTIVE_KINDS:
+                _, b = shape_elems_bytes(op.shape)
+                total["collectives"][kind] += b
+                total["collective_count"] += 1
+                total["bytes"] += self._op_bytes(op, comp)
+                continue
+            if op.opcode == "dot":
+                total["flops"] += _dot_flops(op, comp)
+                total["bytes"] += self._op_bytes(op, comp)
+                continue
+            if op.opcode == "while":
+                body = _BODY.search(op.attrs)
+                cond = _COND.search(op.attrs)
+                tc = 1
+                if cond and cond.group(1) in self.comps:
+                    tc = trip_count(self.comps[cond.group(1)])
+                if body:
+                    add(self._comp_cost(body.group(1)), tc)
+                    if cond:
+                        add(self._comp_cost(cond.group(1)), tc)
+                continue
+            if op.opcode == "conditional":
+                m = _BRANCHES.search(op.attrs)
+                if m:
+                    subs = [s.strip().lstrip("%") for s in
+                            m.group(1).split(",")]
+                    for s in subs:  # conservative: all branches
+                        add(self._comp_cost(s), 1.0 / max(len(subs), 1))
+                continue
+            if op.opcode in ("fusion", "call", "custom-call", "map",
+                             "reduce", "reduce-window", "sort", "scatter",
+                             "select-and-scatter"):
+                m = _CALLS.search(op.attrs) or _TO_APPLY.search(op.attrs)
+                if m and op.opcode in ("fusion", "call"):
+                    sub = self._comp_cost(m.group(1))
+                    # fusions keep flops (dots can live inside kOutput
+                    # fusions) but their internal bytes stay on-chip
+                    total["flops"] += sub["flops"]
+                    for k in COLLECTIVE_KINDS:
+                        total["collectives"][k] += sub["collectives"][k]
+                    total["collective_count"] += sub["collective_count"]
+                total["bytes"] += self._op_bytes(op, comp)
+                continue
+            if op.opcode in _SKIP_BYTES:
+                continue
+            total["bytes"] += self._op_bytes(op, comp)
+
+        self._memo[name] = total
+        return total
+
+    def _op_bytes(self, op: Op, comp: Computation) -> float:
+        """Operand+result bytes with in-place semantics for buffer updates.
+
+        dynamic-update-slice (and fusions rooted in one) are in-place on TPU:
+        traffic is the updated region, not the whole buffer.
+        """
+        if op.opcode == "dynamic-update-slice":
+            upd = shape_elems_bytes(comp.symbols.get(
+                op.operands[1], ""))[1] if len(op.operands) > 1 else 0
+            return float(2 * upd)
+        if op.opcode == "scatter" and len(op.operands) >= 3:
+            upd = shape_elems_bytes(comp.symbols.get(op.operands[2], ""))[1]
+            idx = shape_elems_bytes(comp.symbols.get(op.operands[1], ""))[1]
+            return float(2 * upd + idx)
+        if op.opcode in ("dynamic-slice", "slice", "gather", "concatenate",
+                         "broadcast", "reverse", "pad"):
+            # data movement: traffic = the data actually moved, not the
+            # whole source buffer
+            _, out_b = shape_elems_bytes(op.shape)
+            return float(2 * out_b)
+        if op.opcode == "fusion":
+            return self._fusion_bytes(op, comp)
+        _, out_b = shape_elems_bytes(op.shape)
+        in_b = 0
+        for o in op.operands:
+            sh = comp.symbols.get(o)
+            if sh:
+                in_b += shape_elems_bytes(sh)[1]
+        return float(out_b + in_b)
+
+    def _fusion_bytes(self, op: Op, comp: Computation) -> float:
+        """Fusion traffic with slice/update-aware operand accounting.
+
+        An operand consumed inside the fused computation ONLY via
+        (dynamic-)slice / gather is charged at the sliced size; a fusion
+        rooted in dynamic-update-slice aliases its buffer in place and is
+        charged the update region, not the whole buffer.
+        """
+        m = _CALLS.search(op.attrs)
+        sub = self.comps.get(m.group(1)) if m else None
+        _, out_b = shape_elems_bytes(op.shape)
+        # in-place update fusion: any DUS inside whose buffer traces back to a
+        # parameter (possibly through converts) aliases that parameter; charge
+        # the update region, not the whole buffer.
+        dus_buffer_param = None
+        if sub is not None:
+            dus = [q for q in sub.ops
+                   if q.opcode in ("dynamic-update-slice", "scatter")]
+            if dus:
+                q = dus[-1]
+                upd_idx = 1 if q.opcode == "dynamic-update-slice" else 2
+                out_b = 2 * shape_elems_bytes(
+                    sub.symbols.get(q.operands[upd_idx], ""))[1] \
+                    if len(q.operands) > upd_idx else out_b
+                # trace buffer operand through elementwise wrappers to a param
+                cur_name = q.operands[0]
+                by_name = {o.name: o for o in sub.ops}
+                for _ in range(8):
+                    node = by_name.get(cur_name)
+                    if node is None:
+                        break
+                    if node.opcode == "parameter":
+                        dus_buffer_param = node.operands[0] \
+                            if node.operands else None
+                        break
+                    if node.opcode in ("convert", "bitcast", "copy",
+                                       "reshape", "transpose"):
+                        cur_name = node.operands[0]
+                    else:
+                        break
+
+        in_b = 0
+        for i, o in enumerate(op.operands):
+            sh = comp.symbols.get(o)
+            if not sh:
+                continue
+            full = shape_elems_bytes(sh)[1]
+            if sub is None:
+                in_b += full
+                continue
+            if dus_buffer_param is not None and str(i) == dus_buffer_param:
+                continue  # in-place aliased buffer
+            # find the parameter op for index i and its consumers
+            pname = None
+            for q in sub.ops:
+                if q.opcode == "parameter" and q.operands == [str(i)]:
+                    pname = q.name
+                    break
+            if pname is None:
+                in_b += full
+                continue
+            consumers = [q for q in sub.ops if pname in q.operands]
+            if consumers and all(
+                    q.opcode in ("dynamic-slice", "slice", "gather")
+                    for q in consumers):
+                in_b += sum(shape_elems_bytes(q.shape)[1] for q in consumers)
+            else:
+                in_b += full
+        return float(out_b + in_b)
+
+
+def hlo_cost(text: str) -> dict:
+    return CostModel(text).cost()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod ("data","model") or 2x16x16 ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    try:
+        return jax.make_mesh(shape, axes)
+    except ValueError:
+        # device count != prod(shape) (e.g. 512 placeholders, 256-chip mesh)
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device (smoke tests / examples)."""
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))

@@ -1,0 +1,81 @@
+"""Serving launcher: Agent.xpu engine over an agentic workload trace.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+        --scheduler agent.xpu --rate 1.0 --horizon 300
+
+Default mode is the timing simulator (paper-figure methodology); --real runs
+actual token generation with a tiny model under the same scheduler.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, get_tiny_config
+from repro.core import (AgentXPUEngine, WorkloadConfig, generate_workload)
+from repro.core.annotation import PROFILES
+from repro.core.engine import RealAgentXPUEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--scheduler", default="agent.xpu",
+                    choices=["agent.xpu", "fcfs", "naive_preempt",
+                             "timeshare", "continuous_batching"])
+    ap.add_argument("--hw", default="intel_core_ultra_5_125h",
+                    choices=list(PROFILES))
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="proactive requests/s (Poisson)")
+    ap.add_argument("--reactive-interval", type=float, default=20.0)
+    ap.add_argument("--proactive-profile", default="samsum")
+    ap.add_argument("--reactive-profile", default="lmsys_chat")
+    ap.add_argument("--horizon", type=float, default=300.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--real", action="store_true",
+                    help="actually generate tokens (tiny model)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    wl = WorkloadConfig(proactive_rate=args.rate,
+                        reactive_interval=args.reactive_interval,
+                        proactive_profile=args.proactive_profile,
+                        reactive_profile=args.reactive_profile,
+                        horizon=args.horizon, seed=args.seed)
+    reqs = generate_workload(wl)
+
+    if args.real:
+        import jax
+        import jax.numpy as jnp
+        from repro.models import init_params
+        cfg = get_tiny_config(args.arch) if args.arch != "llama3.2-3b" \
+            else get_tiny_config("llama3-405b")
+        params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        rng = np.random.default_rng(args.seed)
+        for r in reqs:
+            r.prompt_len = min(r.prompt_len, 96)
+            r.max_new_tokens = min(r.max_new_tokens, 16)
+            r.tokens = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
+        eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
+                                 max_len=256)
+        metrics = eng.serve(reqs)
+    else:
+        cfg = get_config(args.arch)
+        eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],
+                             scheduler=args.scheduler)
+        metrics = eng.run_trace(reqs)
+
+    s = metrics.summary()
+    if args.json:
+        print(json.dumps(s, indent=2))
+    else:
+        print(f"[serve] {args.scheduler} on {args.arch} "
+              f"({len(reqs)} requests, rate {args.rate}/s)")
+        for k, v in s.items():
+            print(f"  {k:26s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Every model input is delivered as a ShapeDtypeStruct (weak-type-correct,
+shardable, no device allocation).  The four assigned shapes:
+
+    train_4k     seq 4096    global_batch 256   -> train_step
+    prefill_32k  seq 32768   global_batch 32    -> prefill_step
+    decode_32k   seq 32768   global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288  global_batch 1     -> serve_step, sub-quadratic
+
+Modality frontends are STUBS: ``input_specs`` provides precomputed frame /
+patch embeddings of the right shape (the one sanctioned carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache, init_params, extend
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_supported(cfg, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason).  Skips recorded in DESIGN.md §Arch-applicability."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch without sliding-window variant: "
+                       "a 500k dense KV cache is out of scope by assignment")
+    return True, ""
+
+
+def frontend_spec(cfg, batch: int, dtype=jnp.bfloat16):
+    if cfg.frontend == "none":
+        return None
+    return sds((batch, cfg.frontend_tokens, cfg.frontend_dim), dtype)
+
+
+def decode_window(cfg, shape: ShapeSpec) -> Optional[int]:
+    """Effective attention window when lowering a decode shape."""
+    if shape.name == "long_500k":
+        return cfg.long_context_window or cfg.sliding_window
+    return cfg.sliding_window
+
+
+def params_spec(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda key: init_params(cfg, key, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg, shape_name: str, dtype=jnp.bfloat16, batch_axes=None, tp_axis=None,
+                q_chunk=512, kv_chunk=512, remat=True,
+                capacity_factor=1.25):
+    """(step_fn, args_tuple_of_SDS) for the given architecture x shape."""
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    p_spec = params_spec(cfg, dtype)
+
+    if shape.kind == "train":
+        n_text = S - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+        batch = {"tokens": sds((B, n_text + 1), jnp.int32)}
+        fe = frontend_spec(cfg, B, dtype)
+        if fe is not None:
+            batch["frontend"] = fe
+        opt_spec = jax.eval_shape(init_opt_state, p_spec)
+        step = make_train_step(cfg, AdamWConfig(), batch_axes=batch_axes,
+                               tp_axis=tp_axis, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, remat=remat)
+        return step, (p_spec, opt_spec, batch)
+
+    if shape.kind == "prefill":
+        n_text = S - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+        tokens = sds((B, n_text), jnp.int32)
+        fe = frontend_spec(cfg, B, dtype)
+        window = cfg.sliding_window
+
+        def prefill_step(params, tokens, frontend_emb=None):
+            from repro.models import prefill as _prefill
+            return _prefill(cfg, params, tokens, max_len=S, window=window,
+                            frontend_emb=frontend_emb, dtype=dtype,
+                            batch_axes=batch_axes, tp_axis=tp_axis,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            capacity_factor=capacity_factor)
+
+        args = (p_spec, tokens) + ((fe,) if fe is not None else ())
+        return prefill_step, args
+
+    # decode: one new token against a seq_len-deep cache
+    window = decode_window(cfg, shape)
+    fe = frontend_spec(cfg, B, dtype)
+    cache_spec = jax.eval_shape(
+        lambda p, f: init_cache(cfg, p, B, S, dtype, window=window,
+                                frontend_emb=f),
+        p_spec, fe)
+    tokens = sds((B, 1), jnp.int32)
+
+    def serve_step(params, cache, tokens):
+        return extend(cfg, params, cache, tokens, window=window,
+                      batch_axes=batch_axes, tp_axis=tp_axis)
+
+    return serve_step, (p_spec, cache_spec, tokens)

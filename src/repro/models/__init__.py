@@ -1,0 +1,8 @@
+from repro.models.transformer import (extend, forward, init_cache, init_params,
+                                      layout, prefill)
+from repro.models.params import (batch_pspec, cache_pspecs, param_pspecs,
+                                 param_shardings)
+
+__all__ = ["extend", "forward", "init_cache", "init_params", "layout",
+           "prefill", "batch_pspec", "cache_pspecs", "param_pspecs",
+           "param_shardings"]

@@ -1,0 +1,235 @@
+"""Attention variants: chunked flash-style (train/prefill), cache decode, MLA.
+
+The XLA path here is the reference/distribution implementation used by the
+multi-pod dry-run; the Pallas kernels in ``repro.kernels`` are the TPU-target
+hot-spot implementations of the same math (selected via ``impl='pallas'`` in
+the block functions of ``transformer.py``).
+
+All attention math accumulates in f32.  Shapes:
+  q: (B, Sq, Hq, hd)    k/v: (B, Skv, Hkv, hd)   with Hq % Hkv == 0 (GQA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(pos_q, pos_kv, causal: bool, window: Optional[int], valid_kv=None):
+    """(..., Sq, Skv) additive f32 bias from positions."""
+    pq = pos_q[..., :, None]
+    pk = pos_kv[..., None, :]
+    ok = jnp.broadcast_to((pk >= 0) & (pk < 2**29),
+                          jnp.broadcast_shapes(pq.shape, pk.shape))
+    if causal:
+        ok &= pk <= pq
+    if window is not None:
+        ok &= pk > pq - window
+    if valid_kv is not None:
+        ok &= valid_kv[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attn_q_chunk(q_blk, k, v, pos_q_blk, pos_kv, *, causal, window, kv_chunk, scale):
+    """Online-softmax attention of one query chunk against all of k/v.
+
+    q_blk: (B, cq, Hkv, G, hd);  k/v: (B, Skv, Hkv, hd).
+    Scans kv in chunks carrying (m, l, acc) — the flash-attention recurrence.
+    """
+    B, cq, Hkv, G, hd = q_blk.shape
+    Skv = k.shape[1]
+    n_kv = Skv // kv_chunk
+    kc = k.reshape(B, n_kv, kv_chunk, Hkv, hd)
+    vc = v.reshape(B, n_kv, kv_chunk, Hkv, hd)
+    pkv = pos_kv.reshape(pos_kv.shape[0], n_kv, kv_chunk) if pos_kv.ndim == 2 \
+        else pos_kv.reshape(n_kv, kv_chunk)
+
+    qf = q_blk.astype(jnp.float32) * scale
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, pk_blk = inp
+        # scores: (B, Hkv, G, cq, ck)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_blk.astype(jnp.float32))
+        bias = _mask_bias(pos_q_blk, pk_blk, causal, window)  # (B?, cq, ck)
+        while bias.ndim < s.ndim:
+            bias = bias[..., None, :, :]
+        s = s + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, cq, hd), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    pk_t = jnp.moveaxis(pkv, -2, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc_t, vc_t, pk_t))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, Hkv, G, cq, hd)
+    return jnp.moveaxis(out, 3, 1).astype(q_blk.dtype)  # (B, cq, Hkv, G, hd)
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    pos_q: Optional[jax.Array] = None,
+    pos_kv: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Flash-style chunked attention; memory O(cq * ck), never O(S^2).
+
+    Per-q-chunk work is wrapped in jax.checkpoint so training does not store
+    the probability chunks.  Returns (B, Sq, Hq, hd).
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    if pos_q is None:
+        pos_q = jnp.arange(Sq)
+    if pos_kv is None:
+        pos_kv = jnp.arange(k.shape[1])
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, k.shape[1])
+    # pad Sq / Skv to chunk multiples
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-k.shape[1]) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        pos_q = jnp.pad(pos_q, [(0, 0)] * (pos_q.ndim - 1) + [(0, pad_q)],
+                        constant_values=-1)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        pos_kv = jnp.pad(pos_kv, [(0, 0)] * (pos_kv.ndim - 1) + [(0, pad_kv)],
+                         constant_values=2**30)  # never attended (causal) / masked
+    Sq_p = q.shape[1]
+    n_q = Sq_p // q_chunk
+    qg = q.reshape(B, n_q, q_chunk, Hkv, G, hd)
+    pos_qc = pos_q.reshape(pos_q.shape[:-1] + (n_q, q_chunk))
+
+    body = jax.checkpoint(functools.partial(
+        _attn_q_chunk, causal=causal, window=window, kv_chunk=kv_chunk,
+        scale=scale))
+
+    def per_chunk(args):
+        q_blk, pq_blk = args
+        return body(q_blk, k, v, pq_blk, pos_kv)
+
+    qg_t = jnp.moveaxis(qg, 1, 0)  # (n_q, B, cq, Hkv, G, hd)
+    pq_t = jnp.moveaxis(pos_qc, -2, 0)
+    out = jax.lax.map(per_chunk, (qg_t, pq_t))  # (n_q, B, cq, Hkv, G, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq_p, Hq, hd)
+    return out[:, :Sq]
+
+
+def full_attention(q, k, v, *, causal=False, window=None, pos_q=None,
+                   pos_kv=None, valid_kv=None) -> jax.Array:
+    """Direct softmax attention — for short sequences (encoder, cross-attn)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if causal or window is not None or valid_kv is not None:
+        if pos_q is None:
+            pos_q = jnp.arange(Sq)
+        if pos_kv is None:
+            pos_kv = jnp.arange(k.shape[1])
+        bias = _mask_bias(pos_q, pos_kv, causal, window, valid_kv)
+        while bias.ndim < s.ndim:
+            bias = bias[..., None, :, :]
+        s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos_kv, cur_pos, *,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token decode: q (B, Hq, hd) vs ring-buffer cache (B, S, Hkv, hd).
+
+    ``pos_kv`` (B, S) holds each slot's absolute position (-1 = empty);
+    ``cur_pos`` (B,) is the query's absolute position.
+    """
+    B, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    ok = (pos_kv >= 0) & (pos_kv <= cur_pos[:, None])
+    if window is not None:
+        ok &= pos_kv > (cur_pos[:, None] - window)
+    bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s + bias, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+# -- MLA (DeepSeek-V2) -------------------------------------------------------
+def mla_expand_kv(c_kv, p):
+    """Latent -> per-head K_nope, V.  c_kv: (B, S, r)."""
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+    return k_nope, v
+
+
+def mla_prefill_attention(q_nope, q_rope, c_kv, k_rope, p, *, pos_q, pos_kv,
+                          window=None, q_chunk=512, kv_chunk=512):
+    """MLA attention for full sequences (naive/expanded form).
+
+    q_nope: (B,S,H,dn)  q_rope: (B,S,H,dr)  c_kv: (B,S,r)  k_rope: (B,S,1,dr)
+    """
+    B, S, H, dn = q_nope.shape
+    k_nope, v = mla_expand_kv(c_kv, p)  # (B,S,H,dn), (B,S,H,dv)
+    k_rope_b = jnp.broadcast_to(k_rope, (B, k_rope.shape[1], H, q_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # v head-dim may differ from qk head-dim: pad v to qk dim then slice back.
+    dv = v.shape[-1]
+    dqk = q.shape[-1]
+    if dv < dqk:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+    out = chunked_attention(q, k, v, causal=True, window=window, pos_q=pos_q,
+                            pos_kv=pos_kv, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out[..., :dv]
+
+
+def mla_decode_attention(q_nope, q_rope, c_cache, kr_cache, p, pos_kv, cur_pos,
+                         *, window=None):
+    """Absorbed MLA decode: score and read directly in the latent space.
+
+    q_nope: (B,H,dn)  q_rope: (B,H,dr)
+    c_cache: (B,S,r)  kr_cache: (B,S,dr)
+    Returns per-head context (B,H,dv).
+    """
+    dn = q_nope.shape[-1]
+    dr = q_rope.shape[-1]
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+    s += jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                    kr_cache.astype(jnp.float32))
+    s *= scale
+    ok = (pos_kv >= 0) & (pos_kv <= cur_pos[:, None])
+    if window is not None:
+        ok &= pos_kv > (cur_pos[:, None] - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, :]
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", pr, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, p["w_uv"].astype(jnp.float32))
+    return out.astype(q_nope.dtype)

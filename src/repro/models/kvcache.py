@@ -1,0 +1,73 @@
+"""Per-layer decode/prefill state (KV caches, SSM states).
+
+Layout mirrors the parameter layout of ``transformer.py``:
+
+    cache = {
+      "pos":   (B,) int32     next absolute position to write,
+      "head":  (state_0, ...) unrolled leading layers,
+      "blocks": {pos_idx: stacked_state}   scanned pattern groups (leading R),
+      "tail":  (state_0, ...) unrolled trailing layers,
+      ["enc_out": (B, F, d)]  encoder output (enc-dec models),
+    }
+
+Attention state is a ring buffer of ``alloc`` slots; ``slot_pos`` stores each
+slot's absolute position (-1 = empty) so sliding windows and RoPE stay
+correct after wrap-around.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_alloc_len(cfg, max_len: int, window: Optional[int]) -> int:
+    w = window if window is not None else cfg.sliding_window
+    return min(max_len, w) if w is not None else max_len
+
+
+def init_layer_state(cfg, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, window: Optional[int] = None,
+                     cross_len: int = 0) -> dict:
+    if kind == "attn":
+        if cfg.use_mla:
+            alloc = attn_alloc_len(cfg, max_len, window)
+            st = {
+                "c": jnp.zeros((batch, alloc, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, alloc, cfg.qk_rope_head_dim), dtype),
+                "slot_pos": jnp.full((batch, alloc), -1, jnp.int32),
+            }
+        else:
+            alloc = attn_alloc_len(cfg, max_len, window)
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            st = {
+                "k": jnp.zeros((batch, alloc, hkv, hd), dtype),
+                "v": jnp.zeros((batch, alloc, hkv, hd), dtype),
+                "slot_pos": jnp.full((batch, alloc), -1, jnp.int32),
+            }
+        if cross_len:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            st["xk"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
+            st["xv"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
+        return st
+    if kind == "rwkv6":
+        H = cfg.d_model // cfg.ssm_head_dim
+        return {
+            "wkv": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_head_dim),
+                             jnp.float32),
+            "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    if kind == "rglru":
+        return {
+            "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width),
+                              dtype),
+        }
+    raise ValueError(kind)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(cache))

@@ -1,0 +1,68 @@
+"""Shared layer primitives: RMSNorm, RoPE, MLPs, embeddings.
+
+Everything is a pure function over explicit param pytrees (no flax).  Matmuls
+run in the param dtype (bf16 by default) with f32 accumulation where it
+matters (norms, softmax, recurrent states).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+# -- RoPE -------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate-half RoPE.
+
+    x: (..., S, H, hd)   positions: broadcastable to (..., S)
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs -------------------------------------------------------------------
+def gated_mlp(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU: silu(x@wg) * (x@w1) @ w2."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"]))
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    return jnp.einsum("...f,fd->...d", g * h, p["w2"])
+
+
+def plain_mlp(x: jax.Array, p: dict) -> jax.Array:
+    """GELU MLP (starcoder2 / whisper style)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w1"]))
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+def mlp(x: jax.Array, p: dict, gated: bool) -> jax.Array:
+    return gated_mlp(x, p) if gated else plain_mlp(x, p)
+
+
+def embed_tokens(tokens: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.take(w, tokens, axis=0)
+
+
+def lm_logits(x: jax.Array, params: dict) -> jax.Array:
+    """Final projection to vocab; supports tied embeddings."""
+    if "lm_head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["lm_head"]["w"])
+    return jnp.einsum("...d,vd->...v", x, params["embed"]["w"])

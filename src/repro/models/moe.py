@@ -1,0 +1,77 @@
+"""Mixture-of-Experts FFN with capacity-based sparse dispatch.
+
+Dense-compute-all-experts would misrepresent the roofline (MoE FLOPs must be
+~6*N_active*D), so tokens are scattered into per-expert capacity buffers and
+each expert runs one batched GEMM — the layout that lowers to all-to-all when
+experts are sharded.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp
+
+
+def _router(x, w_router):
+    """Top-k routing probabilities.  x: (T, d) -> logits (T, E) in f32."""
+    return jnp.einsum("td,de->te", x.astype(jnp.float32),
+                      w_router.astype(jnp.float32))
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg, *, capacity_factor: float = 1.25,
+            capacity_override: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """MoE layer over flattened tokens.
+
+    x: (T, d).  p: {"router": (d,E), "experts": {"wg","w1","w2"} stacked (E,..),
+    optional "shared": fused gated-MLP params}.
+    Returns (y (T, d), aux_loss scalar).
+    """
+    T, d = x.shape
+    E = cfg.num_experts
+    K = cfg.moe_top_k
+    capacity = capacity_override or max(1, int(T * K / E * capacity_factor))
+
+    logits = _router(x, p["router"])  # (T, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, k) slot within its expert buffer
+    flat_e = top_e.reshape(-1)  # (T*K,) in routing order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive count
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < capacity  # dropped tokens beyond capacity
+
+    # scatter tokens into (E, C, d)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    xe = jnp.zeros((E, capacity, d), x.dtype)
+    xe = xe.at[flat_e, jnp.where(keep, flat_pos, capacity - 1)].add(
+        jnp.where(keep[:, None], x[tok_idx], 0).astype(x.dtype))
+
+    # expert GEMMs (batched over E)
+    ep = p["experts"]
+    if cfg.mlp_gated:
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, ep["wg"]))
+        h = jnp.einsum("ecd,edf->ecf", xe, ep["w1"])
+        ye = jnp.einsum("ecf,efd->ecd", g * h, ep["w2"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, ep["w1"]))
+        ye = jnp.einsum("ecf,efd->ecd", h, ep["w2"])
+
+    # gather back and combine with routing weights
+    y_tok = ye[flat_e, flat_pos] * keep[:, None]  # (T*K, d)
+    w = top_p.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok_idx].add(y_tok * w)
+
+    if "shared" in p:
+        y = y + mlp(x, p["shared"], cfg.mlp_gated)
+    return y, aux

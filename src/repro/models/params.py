@@ -1,0 +1,167 @@
+"""Parameter / activation sharding rules for the production meshes.
+
+Rules are name-based: the last path component of each leaf decides which
+logical dims get "model" (tensor parallel) and which get the FSDP axes
+("data", plus "pod" when the multi-pod mesh is in use).  A dim is only
+sharded if it divides evenly by the mesh-axis extent — otherwise the axis is
+dropped for that leaf (GSPMD could pad, but even sharding keeps the roofline
+numbers honest).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None or axes == "__none__":
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# (in_axis_spec, out_axis_spec) applied to the trailing two dims.
+# fsdp = the data(-pod) axes; "model" = tensor axis.
+_IN_OUT = {"FSDP_MODEL": ("fsdp", "model"), "MODEL_FSDP": ("model", "fsdp")}
+
+# last-two-dims rule per leaf name
+_RULES = {
+    # projections with (d_in, d_out): shard in over fsdp, out over model
+    "wq": "FSDP_MODEL", "wk": "FSDP_MODEL", "wv": "FSDP_MODEL",
+    "w1": "FSDP_MODEL", "wg": "FSDP_MODEL",
+    "w_q": "FSDP_MODEL", "w_dkv": "FSDP_MODEL", "w_krope": "FSDP_MODEL",
+    "wr": "FSDP_MODEL", "w_lora_a": "FSDP_MODEL",
+    "wk_cm": "FSDP_MODEL", "wr_cm": "FSDP_MODEL",
+    "w_x": "FSDP_MODEL", "w_gate": "FSDP_MODEL", "w_a": "FSDP_MODEL",
+    "w_i": "FSDP_MODEL",
+    "xq": "FSDP_MODEL", "xk": "FSDP_MODEL", "xv": "FSDP_MODEL",
+    # output projections (d_out_big, d): shard in over model, out over fsdp
+    "wo": "MODEL_FSDP", "w2": "MODEL_FSDP", "wv_cm": "MODEL_FSDP",
+    "w_out": "MODEL_FSDP", "xo": "MODEL_FSDP",
+}
+
+
+def _leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh, fsdp) -> P:
+    name = path[-1]
+    ndim = len(shape)
+    model_n = _axis_size(mesh, "model")
+    fsdp_n = _axis_size(mesh, fsdp)
+    if fsdp == "__none__":
+        fsdp = None  # spec entries become replicated
+
+    def ok(dim_idx, ax_n):
+        return ax_n > 1 and shape[dim_idx] % ax_n == 0
+
+    spec = [None] * ndim
+    if name == "w" and path[-2] == "embed":
+        if ok(0, model_n):
+            spec[0] = "model"
+        if ok(1, fsdp_n):
+            spec[1] = fsdp
+    elif name == "w" and path[-2] == "lm_head":
+        if ok(0, fsdp_n):
+            spec[0] = fsdp
+        if ok(1, model_n):
+            spec[1] = "model"
+    elif name == "w" and path[-2] == "frontend_proj":
+        if ok(1, model_n):
+            spec[1] = "model"
+    elif name in ("router",):
+        if ok(ndim - 2, fsdp_n):
+            spec[ndim - 2] = fsdp
+    elif name in ("w_uk", "w_uv"):  # (.., r, H, dn)
+        if ok(ndim - 3, fsdp_n):
+            spec[ndim - 3] = fsdp
+        if ok(ndim - 2, model_n):
+            spec[ndim - 2] = "model"
+    elif name in _RULES and ndim >= 2:
+        a_in, a_out = _IN_OUT[_RULES[name]]
+        ax_i = fsdp if a_in == "fsdp" else "model"
+        ax_o = fsdp if a_out == "fsdp" else "model"
+        if ok(ndim - 2, _axis_size(mesh, ax_i)):
+            spec[ndim - 2] = ax_i
+        if ok(ndim - 1, _axis_size(mesh, ax_o)):
+            spec[ndim - 1] = ax_o
+    elif ndim >= 1 and name in ("conv_w", "lam", "conv_b", "b_a", "b_i"):
+        if ok(ndim - 1, model_n):
+            spec[ndim - 1] = "model"
+    elif ndim >= 1 and name in ("bq", "bk", "bv"):
+        if ok(ndim - 1, model_n):
+            spec[ndim - 1] = "model"
+    # everything else (norms, mus, u, w0, biases): replicated
+    return P(*spec)
+
+
+def _path_str(kp) -> Tuple[str, ...]:
+    out = []
+    for e in kp:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(str(e.idx))
+        else:
+            out.append(str(e))
+    return tuple(out)
+
+
+def param_pspecs(params_shapes, mesh: Mesh, *, multi_pod: Optional[bool] = None,
+                 fsdp: str = "auto"):
+    """Pytree of PartitionSpec matching `params_shapes` (arrays or ShapeDtype).
+
+    fsdp="auto": weights 2-D sharded (FSDP over data axes + TP over model) —
+    the training layout.  fsdp="off": weights sharded over the model axis
+    only and replicated across data (serving layout: no per-step weight
+    all-gathers at the cost of data-axis weight replication)."""
+    axis_names = mesh.axis_names
+    if fsdp == "off":
+        fsdp_axes = "__none__"
+    else:
+        fsdp_axes = ("pod", "data") if "pod" in axis_names else "data"
+
+    def fn(kp, leaf):
+        return _leaf_spec(_path_str(kp), leaf.shape, mesh, fsdp_axes)
+
+    return jax.tree_util.tree_map_with_path(fn, params_shapes)
+
+
+def param_shardings(params_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_pspecs(params_shapes, mesh))
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    """Shard the leading batch dim over as many data axes as divide it."""
+    axis_names = mesh.axis_names
+    cand = [a for a in ("pod", "data") if a in axis_names]
+    use = []
+    n = 1
+    for a in cand:
+        if batch_size % (n * mesh.shape[a]) == 0:
+            use.append(a)
+            n *= mesh.shape[a]
+    first = tuple(use) if use else None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh, batch_size: int):
+    """Shard every cache leaf's batch dim; replicate scalar pos."""
+    def fn(kp, leaf):
+        path = _path_str(kp)
+        if path[-1] == "pos":
+            return batch_pspec(mesh, batch_size, 1)
+        nlead = 0
+        # stacked (repeats, B, ...) leaves live under "blocks"
+        if "blocks" in path:
+            nlead = 1
+        spec = [None] * len(leaf.shape)
+        bspec = batch_pspec(mesh, batch_size, 1)[0]
+        if bspec is not None and leaf.shape[nlead] == batch_size:
+            spec[nlead] = bspec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(fn, cache_shapes)

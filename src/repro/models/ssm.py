@@ -1,0 +1,228 @@
+"""Recurrent sequence mixers: RWKV-6 (Finch) and RG-LRU (Griffin).
+
+Both are implemented in a *chunked* form for train/prefill (parallel within a
+chunk, exact recurrence across chunks — the same dataflow the Pallas kernels
+use) and a single-step form for decode.
+
+Numerics: the RWKV6 intra-chunk term uses the pairwise log-space form
+``exp(L[t-1] - L[s])`` (s <= t-1) whose ratios are always <= 1, so it is
+unconditionally stable in f32 — unlike the factored ``(r*A_prev) @ (k/A)^T``
+form which under/overflows for strong decays.  States are carried in f32.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# =============================== RWKV-6 =====================================
+def rwkv6_chunk(r, k, v, w_log, u, state):
+    """One chunk of the WKV6 recurrence.
+
+    r/k/v: (B,H,C,D)   w_log: (B,H,C,D) = log of data-dependent decay (<0)
+    u: (H,D) bonus     state: (B,H,D,D) f32 (k-dim x v-dim)
+    Returns (out (B,H,C,D), new_state).
+    """
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    L = jnp.cumsum(w_log.astype(jnp.float32), axis=2)  # (B,H,C,D), inclusive
+    L_prev = L - w_log.astype(jnp.float32)  # L_{t-1} (exclusive cumsum)
+
+    # inter-chunk: o_t += (r_t * exp(L_{t-1})) @ S0
+    r_dec = rf * jnp.exp(L_prev)
+    o = jnp.einsum("bhtd,bhde->bhte", r_dec, state)
+
+    # intra-chunk (pairwise, stable): P[t,s] = sum_i r[t,i] k[s,i] e^{L[t-1,i]-L[s,i]}
+    ratio = jnp.exp(L_prev[:, :, :, None, :] - L[:, :, None, :, :])  # (B,H,C,C,D)
+    P = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rf, kf, ratio)
+    C = r.shape[2]
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)  # strictly lower: s < t
+    P = jnp.where(mask, P, 0.0)
+    # diagonal bonus term: s == t weighted by u
+    diag_vals = jnp.einsum("bhtd,hd->bht", rf * kf, u.astype(jnp.float32))
+    idx = jnp.arange(C)
+    P = P.at[..., idx, idx].set(diag_vals)
+    o = o + jnp.einsum("bhts,bhse->bhte", P, vf)
+
+    # state update: S_C = diag(e^{L_C}) S0 + sum_s (k_s * e^{L_C - L_s}) v_s^T
+    decay_all = jnp.exp(L[:, :, -1:, :])  # (B,H,1,D)
+    k_dec = kf * jnp.exp(L[:, :, -1:, :] - L)  # (B,H,C,D), ratios <= 1
+    new_state = state * decay_all.squeeze(2)[..., None] + \
+        jnp.einsum("bhtd,bhte->bhde", k_dec, vf)
+    return o.astype(r.dtype), new_state
+
+
+def rwkv6_scan_chunked(r, k, v, w_log, u, state, chunk: int = 32):
+    """Full-sequence WKV6 via lax.scan over chunks.
+
+    r/k/v/w_log: (B,H,S,D); returns (out (B,H,S,D), final_state).
+    """
+    B, H, S, D = r.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, 0), (0, pad), (0, 0)))  # log 1 = 0 pads
+    n = r.shape[2] // chunk
+    resh = lambda x: jnp.moveaxis(
+        x.reshape(B, H, n, chunk, D), 2, 0)  # (n,B,H,C,D)
+
+    def step(s, inp):
+        rc, kc, vc, wc = inp
+        o, s2 = rwkv6_chunk(rc, kc, vc, wc, u, s)
+        return s2, o
+
+    body = jax.checkpoint(step)
+    final, outs = jax.lax.scan(body, state, (resh(r), resh(k), resh(v), resh(w_log)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, n * chunk, D)[:, :, :S]
+    return out, final
+
+
+def rwkv6_step(r, k, v, w_log, u, state):
+    """Single-token WKV6.  r/k/v/w_log: (B,H,D); state: (B,H,D,D)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    out = jnp.einsum("bhd,bhde->bhe", rf,
+                     state + u.astype(jnp.float32)[None, :, :, None]
+                     * kf[..., None] * vf[..., None, :])
+    w = jnp.exp(w_log.astype(jnp.float32))
+    new_state = state * w[..., None] + kf[..., None] * vf[..., None, :]
+    return out.astype(r.dtype), new_state
+
+
+def rwkv6_block(x, p, cfg, *, shift_state=None, wkv_state=None, mode="train",
+                chunk: int = 32):
+    """Full RWKV6 time-mix block (token-shift, ddlerp decay, WKV, gate, out).
+
+    x: (B,S,d) (train/prefill) or (B,d) (decode).
+    Returns (y, (new_shift, new_wkv_state)).
+    """
+    D = cfg.ssm_head_dim
+    d = cfg.d_model
+    H = d // D
+    single = mode == "decode"
+    if single:
+        x_seq = x[:, None, :]
+    else:
+        x_seq = x
+    B, S, _ = x_seq.shape
+
+    # token shift: previous token's activation (carried across chunks/steps)
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x_seq.dtype)
+    prev = jnp.concatenate([shift_state[:, None, :], x_seq[:, :-1, :]], axis=1)
+    new_shift = x_seq[:, -1, :]
+
+    def mix(mu):
+        return x_seq + (prev - x_seq) * mu  # lerp toward previous token
+
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{n}"]) for n in ("r", "k", "v", "g", "w"))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"])
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"])
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # data-dependent decay (the Finch contribution): low-rank ddlerp
+    w_dd = jnp.einsum("bsr,rd->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])),
+                      p["w_lora_b"])
+    w_log = -jnp.exp(jnp.clip((p["w0"] + w_dd).astype(jnp.float32), -8.0, 1.0))
+
+    hsplit = lambda t: jnp.moveaxis(t.reshape(B, S, H, D), 2, 1)  # (B,H,S,D)
+    r_, k_, v_, wl_ = hsplit(r), hsplit(k), hsplit(v), hsplit(w_log)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, D, D), jnp.float32)
+    if single:
+        o, new_state = rwkv6_step(r_[:, :, 0], k_[:, :, 0], v_[:, :, 0],
+                                  wl_[:, :, 0], p["u"], wkv_state)
+        o = o[:, :, None, :]
+    else:
+        o, new_state = rwkv6_scan_chunked(r_, k_, v_, wl_, p["u"], wkv_state,
+                                          chunk=chunk)
+    o = jnp.moveaxis(o, 1, 2).reshape(B, S, d)
+    # per-head group norm
+    o32 = o.astype(jnp.float32).reshape(B, S, H, D)
+    o32 = (o32 - o32.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        o32.var(-1, keepdims=True) + 1e-5)
+    o = (o32.reshape(B, S, d) * p["ln_w"].astype(jnp.float32)
+         + p["ln_b"].astype(jnp.float32)).astype(x_seq.dtype)
+    y = jnp.einsum("bsd,de->bse", o * g, p["wo"])
+    if single:
+        y = y[:, 0]
+    return y, (new_shift, new_state)
+
+
+# =============================== RG-LRU =====================================
+def rglru_scan(x, a_log, gate_i):
+    """Associative-scan linear recurrence.
+
+    x: (B,S,W)  a_log: (B,S,W) log decay (<0)  gate_i: (B,S,W) input gate.
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)
+    """
+    a = jnp.exp(a_log.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log.astype(jnp.float32)), 0.0)) \
+        * (gate_i.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, a_c
+
+
+def rglru_block(x, p, cfg, *, state=None, mode="train"):
+    """Griffin recurrent block: in-proj, causal depthwise conv, RG-LRU, gate.
+
+    x: (B,S,d) or (B,d) for decode.
+    state = (h (B,W) f32, conv_buf (B, cw-1, W)).
+    """
+    W = cfg.lru_width
+    cw = cfg.conv1d_width
+    single = mode == "decode"
+    x_seq = x[:, None, :] if single else x
+    B, S, _ = x_seq.shape
+
+    xb = jnp.einsum("bsd,dw->bsw", x_seq, p["w_x"])
+    gb = jnp.einsum("bsd,dw->bsw", x_seq, p["w_gate"])
+
+    if state is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+        conv_buf = jnp.zeros((B, cw - 1, W), x_seq.dtype)
+    else:
+        h0, conv_buf = state
+
+    # causal depthwise conv over time (width cw)
+    hist = jnp.concatenate([conv_buf, xb], axis=1)  # (B, S+cw-1, W)
+    conv = sum(hist[:, i:i + S, :] * p["conv_w"][cw - 1 - i] for i in range(cw))
+    conv = conv + p["conv_b"]
+    new_conv_buf = hist[:, -(cw - 1):, :] if cw > 1 else conv_buf
+
+    # gates
+    r_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", conv, p["w_a"]) + p["b_a"])
+    i_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", conv, p["w_i"]) + p["b_i"])
+    c = 8.0
+    a_log = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * \
+        r_gate.astype(jnp.float32)  # (B,S,W), < 0
+
+    if single:
+        a = jnp.exp(a_log[:, 0])
+        beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0))
+        h = a * h0 + beta * (i_gate[:, 0].astype(jnp.float32)
+                             * conv[:, 0].astype(jnp.float32))
+        h_seq = h[:, None, :]
+        new_h = h
+    else:
+        # fold initial state in via a virtual step at t=0
+        hs, a_cum = rglru_scan(conv, a_log, i_gate)
+        h_seq = hs + a_cum * h0[:, None, :]
+        new_h = h_seq[:, -1, :]
+
+    y = jnp.einsum("bsw,wd->bsd", h_seq.astype(x_seq.dtype)
+                   * jax.nn.gelu(gb), p["w_out"])
+    if single:
+        y = y[:, 0]
+    return y, (new_h, new_conv_buf)

@@ -1,0 +1,726 @@
+"""Generic multi-family transformer: init, train forward, prefill/extend, decode.
+
+One code path (`extend`) covers chunked prefill (C tokens against an existing
+cache — the paper's elastic chunked kernel), full prefill (cache fresh), and
+decode (C == 1).  Training uses a cacheless `forward`.
+
+Layer layout (mirrors params/cache pytrees):
+  head   — `first_k_dense_layers` unrolled layers (distinct d_ff),
+  blocks — the repeated `layer_pattern` executed under jax.lax.scan,
+  tail   — `tail_pattern` unrolled layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache
+from repro.models import attention as A
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    full_attention)
+from repro.models.layers import apply_rope, embed_tokens, lm_logits, mlp, rms_norm
+from repro.models.moe import moe_ffn
+from repro.models.ssm import rglru_block, rwkv6_block
+
+
+# ============================ layout helpers ================================
+def layout(cfg):
+    """(head_kinds, pattern, repeats, tail_kinds)."""
+    head = tuple("attn" for _ in range(cfg.first_k_dense_layers))
+    if cfg.layer_pattern:
+        pattern, repeats, tail = (tuple(cfg.layer_pattern), cfg.pattern_repeats,
+                                  tuple(cfg.tail_pattern))
+    else:
+        kind = cfg.block_kind(cfg.first_k_dense_layers) \
+            if cfg.num_layers > cfg.first_k_dense_layers else "attn"
+        pattern = (kind,)
+        repeats = cfg.num_layers - len(head)
+        tail = ()
+    assert len(head) + len(pattern) * repeats + len(tail) == cfg.num_layers, \
+        (cfg.name, len(head), pattern, repeats, tail)
+    return head, pattern, repeats, tail
+
+
+# ============================ initialization ================================
+def _init_attn(cfg, key, dtype, cross: bool):
+    k = iter(jax.random.split(key, 16))
+    d = cfg.d_model
+    std = 0.02
+    out_std = 0.02 / (2 * cfg.num_layers) ** 0.5
+    nrm = lambda k_, sh, s=std: (jax.random.normal(k_, sh) * s).astype(dtype)
+    if cfg.use_mla:
+        dn, dr, dv, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+        H = cfg.num_heads
+        p = {
+            "w_q": nrm(next(k), (d, H * (dn + dr))),
+            "w_dkv": nrm(next(k), (d, r)),
+            "w_krope": nrm(next(k), (d, dr)),
+            "w_uk": nrm(next(k), (r, H, dn)),
+            "w_uv": nrm(next(k), (r, H, dv)),
+            "wo": nrm(next(k), (H * dv, d), out_std),
+            "kv_norm": jnp.ones((r,), dtype),
+        }
+    else:
+        Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        p = {
+            "wq": nrm(next(k), (d, Hq * hd)),
+            "wk": nrm(next(k), (d, Hkv * hd)),
+            "wv": nrm(next(k), (d, Hkv * hd)),
+            "wo": nrm(next(k), (Hq * hd, d), out_std),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((Hq * hd,), dtype)
+            p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+            p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cross:
+        Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        p["xq"] = nrm(next(k), (d, Hq * hd))
+        p["xk"] = nrm(next(k), (d, Hkv * hd))
+        p["xv"] = nrm(next(k), (d, Hkv * hd))
+        p["xo"] = nrm(next(k), (Hq * hd, d), out_std)
+    return p
+
+
+def _init_ffn(cfg, key, dtype, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    std = 0.02
+    out_std = 0.02 / (2 * cfg.num_layers) ** 0.5
+    p = {"w1": (jax.random.normal(k1, (d, d_ff)) * std).astype(dtype),
+         "w2": (jax.random.normal(k2, (d_ff, d)) * out_std).astype(dtype)}
+    if cfg.mlp_gated:
+        p["wg"] = (jax.random.normal(k3, (d, d_ff)) * std).astype(dtype)
+    return p
+
+
+def _init_moe(cfg, key, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    std = 0.02
+    out_std = 0.02 / (2 * cfg.num_layers) ** 0.5
+    ekeys = jax.random.split(ke, 3)
+    experts = {
+        "w1": (jax.random.normal(ekeys[0], (E, d, f)) * std).astype(dtype),
+        "w2": (jax.random.normal(ekeys[1], (E, f, d)) * out_std).astype(dtype),
+    }
+    if cfg.mlp_gated:
+        experts["wg"] = (jax.random.normal(ekeys[2], (E, d, f)) * std).astype(dtype)
+    p = {"router": (jax.random.normal(kr, (d, E)) * std).astype(jnp.float32),
+         "experts": experts}
+    if cfg.num_shared_experts:
+        p["shared"] = _init_ffn(cfg, ks, dtype,
+                                cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _init_rwkv6(cfg, key, dtype):
+    k = iter(jax.random.split(key, 12))
+    d = cfg.d_model
+    D = cfg.ssm_head_dim
+    H = d // D
+    std = 0.02
+    out_std = 0.02 / (2 * cfg.num_layers) ** 0.5
+    lora_r = 64
+    nrm = lambda k_, sh, s=std: (jax.random.normal(k_, sh) * s).astype(dtype)
+    p = {
+        "wr": nrm(next(k), (d, d)), "wk": nrm(next(k), (d, d)),
+        "wv": nrm(next(k), (d, d)), "wg": nrm(next(k), (d, d)),
+        "wo": nrm(next(k), (d, d), out_std),
+        "w0": (jnp.zeros((d,)) + 0.5).astype(jnp.float32),  # base decay ~ e^{-e^{0.5}}
+        "w_lora_a": nrm(next(k), (d, lora_r)),
+        "w_lora_b": nrm(next(k), (lora_r, d)),
+        "u": nrm(next(k), (H, D)),
+        "ln_w": jnp.ones((d,), dtype), "ln_b": jnp.zeros((d,), dtype),
+    }
+    for n in ("r", "k", "v", "g", "w"):
+        p[f"mu_{n}"] = (jnp.full((d,), 0.5)).astype(dtype)
+    # channel mix (RWKV FFN uses its own token shift; handled in block fn)
+    p["cm"] = {
+        "mu": (jnp.full((d,), 0.5)).astype(dtype),
+        "wk_cm": nrm(next(k), (d, cfg.d_ff)),
+        "wv_cm": nrm(next(k), (cfg.d_ff, d), out_std),
+        "wr_cm": nrm(next(k), (d, d)),
+    }
+    return p
+
+
+def _init_rglru(cfg, key, dtype):
+    k = iter(jax.random.split(key, 8))
+    d, W, cw = cfg.d_model, cfg.lru_width, cfg.conv1d_width
+    std = 0.02
+    out_std = 0.02 / (2 * cfg.num_layers) ** 0.5
+    nrm = lambda k_, sh, s=std: (jax.random.normal(k_, sh) * s).astype(dtype)
+    return {
+        "w_x": nrm(next(k), (d, W)), "w_gate": nrm(next(k), (d, W)),
+        "conv_w": nrm(next(k), (cw, W)), "conv_b": jnp.zeros((W,), dtype),
+        "w_a": nrm(next(k), (W, W)), "b_a": jnp.zeros((W,), dtype),
+        "w_i": nrm(next(k), (W, W)), "b_i": jnp.zeros((W,), dtype),
+        # softplus(lam) ~ 0.7 -> decay exp(-8*0.7*sigmoid) moderately strong
+        "lam": jnp.full((W,), 0.2, jnp.float32),
+        "w_out": nrm(next(k), (W, d), out_std),
+    }
+
+
+def init_layer(cfg, kind: str, key, dtype, *, layer_idx: int, cross: bool):
+    kn, km, kf = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"norm1": {"w": jnp.ones((d,), dtype)},
+         "norm2": {"w": jnp.ones((d,), dtype)}}
+    if kind == "attn":
+        p["attn"] = _init_attn(cfg, km, dtype, cross)
+        if cross:
+            p["norm_x"] = {"w": jnp.ones((d,), dtype)}
+    elif kind == "rwkv6":
+        p["tm"] = _init_rwkv6(cfg, km, dtype)
+    elif kind == "rglru":
+        p["rg"] = _init_rglru(cfg, km, dtype)
+    # FFN (rwkv6 carries its channel-mix inside tm["cm"])
+    if kind != "rwkv6":
+        if cfg.is_moe and layer_idx >= cfg.first_k_dense_layers:
+            p["moe"] = _init_moe(cfg, kf, dtype)
+        else:
+            dff = cfg.dense_d_ff if (cfg.is_moe and
+                                     layer_idx < cfg.first_k_dense_layers) \
+                else cfg.d_ff
+            p["ffn"] = _init_ffn(cfg, kf, dtype, dff)
+    return p
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    head, pattern, repeats, tail = layout(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params = {
+        "embed": {"w": (jax.random.normal(keys[0], (cfg.vocab_size, d))
+                        * 0.02).astype(dtype)},
+        "final_norm": {"w": jnp.ones((d,), dtype)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": (jax.random.normal(keys[1], (d, cfg.vocab_size))
+                                   * 0.02).astype(dtype)}
+    cross = cfg.is_encoder_decoder
+    # head layers (unrolled)
+    hkeys = jax.random.split(keys[2], max(len(head), 1))
+    params["head"] = tuple(
+        init_layer(cfg, k_, hkeys[i], dtype, layer_idx=i, cross=cross)
+        for i, k_ in enumerate(head))
+    # scanned pattern groups: stacked over repeats via vmap
+    base_idx = len(head)
+    blocks = {}
+    pkeys = jax.random.split(keys[3], max(len(pattern), 1))
+    for pi, kind in enumerate(pattern):
+        rkeys = jax.random.split(pkeys[pi], repeats)
+        blocks[str(pi)] = jax.vmap(
+            lambda kk: init_layer(cfg, kind, kk, dtype,
+                                  layer_idx=base_idx + pi, cross=cross))(rkeys)
+    params["blocks"] = blocks
+    # tail layers (unrolled)
+    tkeys = jax.random.split(keys[4], max(len(tail), 1))
+    params["tail"] = tuple(
+        init_layer(cfg, k_, tkeys[i], dtype,
+                   layer_idx=cfg.num_layers - len(tail) + i, cross=cross)
+        for i, k_ in enumerate(tail))
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(keys[5], cfg.num_encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda kk: init_layer(cfg, "attn", kk, dtype, layer_idx=0,
+                                  cross=False))(ekeys)
+    if cfg.frontend != "none" and cfg.frontend_dim != cfg.d_model:
+        params["frontend_proj"] = {
+            "w": (jax.random.normal(keys[6], (cfg.frontend_dim, d)) * 0.02
+                  ).astype(dtype)}
+    return params
+
+
+# ============================ block application =============================
+def _rwkv6_channel_mix(x_seq, p, shift_state):
+    """RWKV channel-mix FFN with its own token shift.
+
+    x_seq: (B,S,d).  Returns (y, new_shift)."""
+    prev = jnp.concatenate([shift_state[:, None, :], x_seq[:, :-1, :]], axis=1)
+    xk = x_seq + (prev - x_seq) * p["mu"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk_cm"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv_cm"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xk, p["wr_cm"]))
+    return r * kv, x_seq[:, -1, :]
+
+
+def _attn_mix_train(cfg, lp, x, ctx):
+    """Cacheless causal self-attention over the full sequence (training)."""
+    B, S, d = x.shape
+    ap = lp["attn"]
+    window = ctx.get("window") or cfg.sliding_window
+    pos = ctx["positions"]  # (S,)
+    if cfg.use_mla:
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H = cfg.num_heads
+        q = jnp.einsum("bsd,de->bse", x, ap["w_q"]).reshape(B, S, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, ap["w_dkv"]),
+                        ap["kv_norm"], cfg.norm_eps)
+        k_rope = apply_rope(jnp.einsum("bsd,dr->bsr", x, ap["w_krope"])[:, :, None, :],
+                            pos, cfg.rope_theta)
+        out = A.mla_prefill_attention(q_nope, q_rope, c_kv, k_rope, ap,
+                                      pos_q=pos, pos_kv=pos, window=window,
+                                      q_chunk=ctx["q_chunk"],
+                                      kv_chunk=ctx["kv_chunk"])
+        return jnp.einsum("bsD,Dd->bsd", out.reshape(B, S, H * dv), ap["wo"])
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, ap["wq"])
+    k = jnp.einsum("bsd,de->bse", x, ap["wk"])
+    v = jnp.einsum("bsd,de->bse", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = apply_rope(q.reshape(B, S, Hq, hd), pos, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, S, Hkv, hd), pos, cfg.rope_theta)
+    v = v.reshape(B, S, Hkv, hd)
+    if ctx.get("tp_axis"):
+        k, v = _expand_kv(k, Hq // Hkv), _expand_kv(v, Hq // Hkv)
+        q = _constrain_heads(q, ctx)
+        k = _constrain_heads(k, ctx)
+        v = _constrain_heads(v, ctx)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            pos_q=pos, pos_kv=pos,
+                            q_chunk=ctx["q_chunk"], kv_chunk=ctx["kv_chunk"])
+    out = _constrain_heads(out, ctx)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, Hq * hd), ap["wo"])
+
+
+def _attn_mix_extend(cfg, lp, x, st, ctx):
+    """Self-attention of a C-token chunk against the ring-buffer cache.
+
+    Writes the chunk's K/V into the cache first, then attends with position
+    masks; C == 1 uses the single-token decode kernels (incl. absorbed MLA).
+    """
+    B, C, d = x.shape
+    ap = lp["attn"]
+    window = ctx.get("window") or cfg.sliding_window
+    pos = ctx["pos0"][:, None] + jnp.arange(C)[None, :]  # (B, C) absolute
+    alloc = st["slot_pos"].shape[1]
+    bidx = jnp.arange(B)[:, None]
+
+    def write(buf, val):
+        # write the chunk tail (last min(C, alloc) tokens) at pos % alloc
+        n = min(C, alloc)
+        slots = (pos[:, C - n:] % alloc)
+        return buf.at[bidx, slots].set(val[:, C - n:])
+
+    if cfg.use_mla:
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H = cfg.num_heads
+        q = jnp.einsum("bsd,de->bse", x, ap["w_q"]).reshape(B, C, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, ap["w_dkv"]),
+                        ap["kv_norm"], cfg.norm_eps)
+        k_rope = apply_rope(jnp.einsum("bsd,dr->bsr", x, ap["w_krope"])
+                            [:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+        st = dict(st, c=write(st["c"], c_kv), kr=write(st["kr"], k_rope),
+                  slot_pos=write(st["slot_pos"], pos))
+        if C == 1:
+            c_r = _constrain_cache_seq(st["c"], ctx)
+            kr_r = _constrain_cache_seq(st["kr"], ctx)
+            sp_r = _constrain_cache_seq(st["slot_pos"], ctx)
+            out = A.mla_decode_attention(q_nope[:, 0], q_rope[:, 0], c_r,
+                                         kr_r, ap, sp_r,
+                                         pos[:, 0], window=window)[:, None]
+        else:
+            k_nope, vv = A.mla_expand_kv(st["c"], ap)
+            kr_b = jnp.broadcast_to(st["kr"][:, :, None, :],
+                                    (B, alloc, H, dr))
+            qq = jnp.concatenate([q_nope, q_rope], -1)
+            kk = jnp.concatenate([k_nope, kr_b], -1)
+            if dv < dn + dr:
+                vv = jnp.pad(vv, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+            out = chunked_attention(
+                qq, kk, vv, causal=True, window=window, pos_q=pos,
+                pos_kv=st["slot_pos"], q_chunk=ctx["q_chunk"],
+                kv_chunk=ctx["kv_chunk"])[..., :dv]
+        y = jnp.einsum("bsD,Dd->bsd", out.reshape(B, C, H * dv), ap["wo"])
+        return y, st
+
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, ap["wq"])
+    k = jnp.einsum("bsd,de->bse", x, ap["wk"])
+    v = jnp.einsum("bsd,de->bse", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = apply_rope(q.reshape(B, C, Hq, hd), pos, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, C, Hkv, hd), pos, cfg.rope_theta)
+    v = v.reshape(B, C, Hkv, hd)
+    st = dict(st, k=write(st["k"], k), v=write(st["v"], v),
+              slot_pos=write(st["slot_pos"], pos))
+    if C == 1:
+        k_r = _constrain_cache_seq(st["k"], ctx)
+        v_r = _constrain_cache_seq(st["v"], ctx)
+        sp_r = _constrain_cache_seq(st["slot_pos"], ctx)
+        out = decode_attention(q[:, 0], k_r, v_r, sp_r,
+                               pos[:, 0], window=window)[:, None]
+    else:
+        kk, vv = st["k"], st["v"]
+        if ctx.get("tp_axis"):
+            kk, vv = _expand_kv(kk, Hq // Hkv), _expand_kv(vv, Hq // Hkv)
+            q = _constrain_heads(q, ctx)
+            kk = _constrain_heads(kk, ctx)
+            vv = _constrain_heads(vv, ctx)
+        out = chunked_attention(q, kk, vv, causal=True, window=window,
+                                pos_q=pos, pos_kv=st["slot_pos"],
+                                q_chunk=ctx["q_chunk"], kv_chunk=ctx["kv_chunk"])
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, C, Hq * hd), ap["wo"])
+    return y, st
+
+
+def _cross_attn(cfg, lp, x, st, ctx):
+    """Encoder-decoder cross attention; K/V cached in state (or from enc_out)."""
+    B, C, d = x.shape
+    ap = lp["attn"]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, ap["xq"]).reshape(B, C, Hq, hd)
+    if st is not None and "xk" in st:
+        xk, xv = st["xk"], st["xv"]
+    else:
+        enc = ctx["enc_out"]
+        xk = jnp.einsum("bfd,de->bfe", enc, ap["xk"]).reshape(
+            B, enc.shape[1], Hkv, hd)
+        xv = jnp.einsum("bfd,de->bfe", enc, ap["xv"]).reshape(
+            B, enc.shape[1], Hkv, hd)
+    out = full_attention(q, xk, xv, causal=False)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, C, Hq * hd), ap["xo"])
+
+
+def _ffn_apply(cfg, lp, x, ctx):
+    """FFN / MoE sublayer on (B,S,d); returns (y, aux_loss)."""
+    if "moe" in lp:
+        B, S, d = x.shape
+        # decode is dropless (capacity = T); prefill/train use capacity factor
+        cap = B * S if ctx["mode"] == "decode" else 0
+        y, aux = moe_ffn(x.reshape(B * S, d), lp["moe"], cfg,
+                         capacity_factor=ctx.get("capacity_factor", 1.25),
+                         capacity_override=cap)
+        return y.reshape(B, S, d), aux
+    return mlp(x, lp["ffn"], cfg.mlp_gated), jnp.zeros((), jnp.float32)
+
+
+def apply_block(cfg, kind, lp, x, st, ctx):
+    """One residual block.  st is None in training mode.
+
+    Returns (x, new_state, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    mode = ctx["mode"]
+    if kind == "attn":
+        h = rms_norm(x, lp["norm1"]["w"], cfg.norm_eps)
+        if mode == "train":
+            y = _attn_mix_train(cfg, lp, h, ctx)
+            new_st = st
+        else:
+            y, new_st = _attn_mix_extend(cfg, lp, h, st, ctx)
+        x = x + y
+        if cfg.is_encoder_decoder and "norm_x" in lp:
+            hx = rms_norm(x, lp["norm_x"]["w"], cfg.norm_eps)
+            x = x + _cross_attn(cfg, lp, hx, st, ctx)
+        h2 = rms_norm(x, lp["norm2"]["w"], cfg.norm_eps)
+        y2, aux = _ffn_apply(cfg, lp, h2, ctx)
+        return x + y2, new_st, aux
+    if kind == "rwkv6":
+        h = rms_norm(x, lp["norm1"]["w"], cfg.norm_eps)
+        tm = lp["tm"]
+        if mode == "train":
+            y, _ = rwkv6_block(h, tm, cfg, mode="train", chunk=ctx["ssm_chunk"])
+            new_st = st
+            x = x + y
+            h2 = rms_norm(x, lp["norm2"]["w"], cfg.norm_eps)
+            cm_shift = jnp.zeros((x.shape[0], cfg.d_model), x.dtype)
+            y2, _ = _rwkv6_channel_mix(h2, tm["cm"], cm_shift)
+            return x + y2, new_st, aux
+        single = mode == "decode"
+        h_in = h[:, 0] if single else h
+        y, (new_shift, new_wkv) = rwkv6_block(
+            h_in, tm, cfg, shift_state=st["shift_tm"], wkv_state=st["wkv"],
+            mode="decode" if single else "prefill", chunk=ctx["ssm_chunk"])
+        x = x + (y[:, None] if single else y)
+        h2 = rms_norm(x, lp["norm2"]["w"], cfg.norm_eps)
+        y2, new_cm = _rwkv6_channel_mix(h2, tm["cm"], st["shift_cm"])
+        new_st = {"wkv": new_wkv, "shift_tm": new_shift, "shift_cm": new_cm}
+        return x + y2, new_st, aux
+    if kind == "rglru":
+        h = rms_norm(x, lp["norm1"]["w"], cfg.norm_eps)
+        if mode == "train":
+            y, _ = rglru_block(h, lp["rg"], cfg, mode="train")
+            new_st = st
+        else:
+            single = mode == "decode"
+            h_in = h[:, 0] if single else h
+            y, (nh, nc) = rglru_block(h_in, lp["rg"], cfg,
+                                      state=(st["h"], st["conv"]),
+                                      mode="decode" if single else "prefill")
+            if single:
+                y = y[:, None]
+            new_st = {"h": nh, "conv": nc}
+        x = x + y
+        h2 = rms_norm(x, lp["norm2"]["w"], cfg.norm_eps)
+        y2, aux = _ffn_apply(cfg, lp, h2, ctx)
+        return x + y2, new_st, aux
+    raise ValueError(kind)
+
+
+# ============================ trunk runners =================================
+def _default_ctx(cfg, mode, **kw):
+    ctx = {"mode": mode, "q_chunk": 512, "kv_chunk": 512, "ssm_chunk": 32,
+           "capacity_factor": 1.25, "batch_axes": None, "tp_axis": None}
+    ctx.update(kw)
+    return ctx
+
+
+def _constrain(x, ctx):
+    """Pin the residual stream's batch dim to the data axes (GSPMD can
+    otherwise drop batch sharding and replicate activations globally)."""
+    ax = ctx.get("batch_axes")
+    if not ax:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(ax, *([None] * (x.ndim - 1))))
+
+
+def _constrain_heads(t, ctx):
+    """Shard (B, S, H, hd) attention tensors: batch over data axes, heads
+    over the model axis.  Keeps the score contraction (over hd) local —
+    without this GSPMD shards hd and all-reduces every score block."""
+    tp = ctx.get("tp_axis")
+    if not tp:
+        return t
+    from jax.sharding import PartitionSpec as P
+    ax = ctx.get("batch_axes")
+    return jax.lax.with_sharding_constraint(t, P(ax, None, tp, None))
+
+
+def _expand_kv(k, G):
+    """GQA -> MHA expansion so the head axis is cleanly shardable in the
+    XLA path (the Pallas kernels do grouped GQA natively instead)."""
+    if G == 1:
+        return k
+    return jnp.repeat(k, G, axis=2)
+
+
+def _constrain_cache_seq(t, ctx, seq_axis=1):
+    """Sequence-shard a decode cache over the model axis (split-KV /
+    flash-decoding): each model rank scores its S/TP slice for all heads and
+    GSPMD reduces the tiny partial softmax stats — instead of all-gathering
+    the whole cache per layer per step."""
+    tp = ctx.get("tp_axis")
+    if not tp:
+        return t
+    from jax.sharding import PartitionSpec as P
+    ax = ctx.get("batch_axes")
+    spec = [None] * t.ndim
+    spec[0] = ax
+    spec[seq_axis] = tp
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def _run_trunk(cfg, params, x, cache, ctx, *, remat):
+    """Head layers -> scanned pattern groups -> tail layers."""
+    head, pattern, repeats, tail = layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    mode = ctx["mode"]
+    with_cache = cache is not None
+
+    def one(kind, lp, x, st):
+        return apply_block(cfg, kind, lp, x, st, ctx)
+
+    x = _constrain(x, ctx)
+    new_head = []
+    for i, kind in enumerate(head):
+        st = cache["head"][i] if with_cache else None
+        x, st2, aux = one(kind, params["head"][i], x, st)
+        x = _constrain(x, ctx)
+        new_head.append(st2)
+        aux_total += aux
+
+    # scanned groups
+    def group_body(carry, xs):
+        x, auxc = carry
+        gp, gst = xs
+        new_states = {}
+        for pi, kind in enumerate(pattern):
+            st = gst[str(pi)] if with_cache else None
+            x, st2, aux = apply_block(cfg, kind, gp[str(pi)], x, st, ctx)
+            x = _constrain(x, ctx)
+            new_states[str(pi)] = st2 if with_cache else 0
+            auxc = auxc + aux
+        return (x, auxc), (new_states if with_cache else 0)
+
+    if remat == "dots":
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif remat:
+        body = jax.checkpoint(group_body)
+    else:
+        body = group_body
+    xs = (params["blocks"], cache["blocks"]) if with_cache \
+        else (params["blocks"], {str(pi): jnp.zeros((repeats,))
+                                 for pi in range(len(pattern))})
+    (x, aux_total), new_blocks = jax.lax.scan(body, (x, aux_total), xs)
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        st = cache["tail"][i] if with_cache else None
+        x, st2, aux = one(kind, params["tail"][i], x, st)
+        x = _constrain(x, ctx)
+        new_tail.append(st2)
+        aux_total += aux
+
+    new_cache = None
+    if with_cache:
+        new_cache = dict(cache, head=tuple(new_head), blocks=new_blocks,
+                         tail=tuple(new_tail))
+    return x, new_cache, aux_total
+
+
+# ============================ public entry points ===========================
+def encode(cfg, params, frontend_emb):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    x = frontend_emb
+    if "frontend_proj" in params:
+        x = jnp.einsum("bfe,ed->bfd", x, params["frontend_proj"]["w"])
+    ctx = _default_ctx(cfg, "train", positions=jnp.arange(x.shape[1]),
+                       window=None)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"]["w"], cfg.norm_eps)
+        B, F, d = h.shape
+        ap = lp["attn"]
+        Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,de->bse", h, ap["wq"]).reshape(B, F, Hq, hd)
+        k = jnp.einsum("bsd,de->bse", h, ap["wk"]).reshape(B, F, Hkv, hd)
+        v = jnp.einsum("bsd,de->bse", h, ap["wv"]).reshape(B, F, Hkv, hd)
+        if cfg.qkv_bias:
+            q = q + ap["bq"].reshape(Hq, hd)
+            k = k + ap["bk"].reshape(Hkv, hd)
+            v = v + ap["bv"].reshape(Hkv, hd)
+        out = full_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bse,ed->bsd", out.reshape(B, F, Hq * hd), ap["wo"])
+        h2 = rms_norm(x, lp["norm2"]["w"], cfg.norm_eps)
+        x = x + mlp(h2, lp["ffn"], cfg.mlp_gated)
+        return x, 0
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return x
+
+
+def prepend_frontend(cfg, params, tokens_emb, frontend_emb):
+    """VLM: project and prepend patch embeddings to the token embeddings."""
+    fe = frontend_emb
+    if "frontend_proj" in params:
+        fe = jnp.einsum("bfe,ed->bfd", fe, params["frontend_proj"]["w"])
+    return jnp.concatenate([fe.astype(tokens_emb.dtype), tokens_emb], axis=1)
+
+
+def forward(cfg, params, tokens, frontend_emb=None, *, window=None,
+            remat=True, q_chunk=512, kv_chunk=512, capacity_factor=1.25,
+            batch_axes=None, tp_axis=None):
+    """Training forward: full-sequence logits (B, S_total, V) + moe aux loss."""
+    x = embed_tokens(tokens, params["embed"]["w"])
+    ctx_kw = {}
+    if cfg.is_encoder_decoder:
+        assert frontend_emb is not None
+        ctx_kw["enc_out"] = encode(cfg, params, frontend_emb)
+    elif cfg.frontend == "vision" and frontend_emb is not None:
+        x = prepend_frontend(cfg, params, x, frontend_emb)
+    S = x.shape[1]
+    ctx = _default_ctx(cfg, "train", positions=jnp.arange(S), window=window,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk,
+                       capacity_factor=capacity_factor, batch_axes=batch_axes,
+                       tp_axis=tp_axis, **ctx_kw)
+    x, _, aux = _run_trunk(cfg, params, x, None, ctx, remat=remat)
+    x = rms_norm(x, params["final_norm"]["w"], cfg.norm_eps)
+    return lm_logits(x, params), aux
+
+
+def init_cache(cfg, params, batch, max_len, dtype=jnp.bfloat16, *,
+               window=None, frontend_emb=None):
+    """Fresh decode state; computes encoder output / cross-KV for enc-dec."""
+    head, pattern, repeats, tail = layout(cfg)
+    cross_len = cfg.frontend_tokens if cfg.is_encoder_decoder else 0
+    mk = lambda kind: kvcache.init_layer_state(
+        cfg, kind, batch, max_len, dtype, window=window, cross_len=cross_len)
+    cache = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "head": tuple(mk(k) for k in head),
+        "blocks": {str(pi): jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (repeats,) + x.shape),
+            mk(kind)) for pi, kind in enumerate(pattern)},
+        "tail": tuple(mk(k) for k in tail),
+    }
+    if cfg.is_encoder_decoder:
+        assert frontend_emb is not None
+        enc_out = encode(cfg, params, frontend_emb)
+        cache["enc_out"] = enc_out
+
+        # precompute cross K/V per layer
+        def fill_cross(st, lp):
+            ap = lp["attn"]
+            B, F, _ = enc_out.shape
+            Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            xk = jnp.einsum("bfd,de->bfe", enc_out, ap["xk"]).reshape(
+                B, F, Hkv, hd).astype(dtype)
+            xv = jnp.einsum("bfd,de->bfe", enc_out, ap["xv"]).reshape(
+                B, F, Hkv, hd).astype(dtype)
+            return dict(st, xk=xk, xv=xv)
+
+        cache["head"] = tuple(fill_cross(st, lp) for st, lp
+                              in zip(cache["head"], params["head"]))
+        for pi, kind in enumerate(pattern):
+            if kind == "attn":
+                cache["blocks"][str(pi)] = jax.vmap(fill_cross)(
+                    cache["blocks"][str(pi)], params["blocks"][str(pi)])
+        cache["tail"] = tuple(fill_cross(st, lp) for st, lp
+                              in zip(cache["tail"], params["tail"]))
+    return cache
+
+
+def extend(cfg, params, cache, tokens, *, window=None, frontend_emb=None,
+           q_chunk=512, kv_chunk=512, remat=False, capacity_factor=1.25,
+           batch_axes=None, tp_axis=None):
+    """Process a chunk of C tokens against the cache (C == 1 => decode step).
+
+    tokens: (B, C) int32.  Returns (logits_last (B, V), new_cache).
+    """
+    B, C = tokens.shape
+    x = embed_tokens(tokens, params["embed"]["w"])
+    if cfg.frontend == "vision" and frontend_emb is not None:
+        x = prepend_frontend(cfg, params, x, frontend_emb)
+        C = x.shape[1]
+    mode = "decode" if C == 1 else "prefill"
+    ctx_kw = {}
+    if cfg.is_encoder_decoder:
+        ctx_kw["enc_out"] = cache.get("enc_out")
+    ctx = _default_ctx(cfg, mode, pos0=cache["pos"], window=window,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk,
+                       capacity_factor=capacity_factor, batch_axes=batch_axes,
+                       tp_axis=tp_axis, **ctx_kw)
+    x, new_cache, _ = _run_trunk(cfg, params, x, cache, ctx, remat=remat)
+    new_cache = dict(new_cache, pos=cache["pos"] + C)
+    x_last = x[:, -1, :]
+    x_last = rms_norm(x_last, params["final_norm"]["w"], cfg.norm_eps)
+    return lm_logits(x_last, params), new_cache
+
+
+def prefill(cfg, params, tokens, *, max_len=None, window=None,
+            frontend_emb=None, dtype=jnp.bfloat16, q_chunk=512, kv_chunk=512,
+            capacity_factor=1.25, batch_axes=None, tp_axis=None):
+    """Full prefill: build a fresh cache and run the whole prompt through it."""
+    B, S = tokens.shape
+    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    max_len = max_len or (S + extra)
+    fe = frontend_emb if cfg.is_encoder_decoder else None
+    cache = init_cache(cfg, params, B, max_len, dtype, window=window,
+                       frontend_emb=fe)
+    vfe = frontend_emb if cfg.frontend == "vision" else None
+    return extend(cfg, params, cache, tokens, window=window, frontend_emb=vfe,
+                  q_chunk=q_chunk, kv_chunk=kv_chunk,
+                  capacity_factor=capacity_factor, batch_axes=batch_axes,
+                  tp_axis=tp_axis)

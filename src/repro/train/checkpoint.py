@@ -1,0 +1,64 @@
+"""Flat-npz checkpointing with resume (no orbax dependency).
+
+Leaves are saved under slash-joined path keys; restore validates the tree
+structure against a template pytree so shape drift fails loudly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    blobs = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blobs.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path + ".tmp.npz", **blobs)
+    os.replace(path + ".tmp.npz", path)
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(ckpt_dir, "latest.json"), "w") as f:
+        json.dump({"path": path, **meta}, f)
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    meta = os.path.join(ckpt_dir, "latest.json")
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f)["path"]
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None
+                       ) -> Tuple[Any, Any, int]:
+    data = np.load(path)
+    pl, ptd = jax.tree_util.tree_flatten_with_path(params_template)
+    keys = ["/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                     for e in path_) for path_, _ in pl]
+    params = jax.tree_util.tree_unflatten(
+        ptd, [data[f"params/{k}"] for k in keys])
+    opt_state = None
+    if opt_template is not None:
+        ol, otd = jax.tree_util.tree_flatten_with_path(opt_template)
+        okeys = ["/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                          for e in path_) for path_, _ in ol]
+        opt_state = jax.tree_util.tree_unflatten(
+            otd, [data[f"opt/{k}"] for k in okeys])
+    step = int(os.path.basename(path).split("_")[1].split(".")[0])
+    return params, opt_state, step

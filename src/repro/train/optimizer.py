@@ -1,0 +1,97 @@
+"""AdamW with cosine schedule and global-norm clipping (pure JAX, no optax).
+
+Moments are kept in f32; parameters may be bf16 (updates computed in f32 and
+cast back).  State is a plain pytree so it shards with the same FSDP rules as
+the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # f32 pytree like params
+    v: Any  # f32 pytree like params
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.minimum(warm, cfg.lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / scalar gains."""
+    names = {"norm1", "norm2", "norm_x", "final_norm", "kv_norm", "ln_w",
+             "ln_b", "w0", "u", "lam", "conv_b", "b_a", "b_i",
+             "bq", "bk", "bv"}
+    return not any(str(getattr(e, "key", "")) in names for e in path)
+
+
+def adamw_update(opt_cfg: AdamWConfig, params, grads, state: AdamWState):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(opt_cfg, state.step)
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + opt_cfg.eps)
+        if _decay_mask(path):
+            delta = delta + opt_cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p2, m2, v2
+
+    # flatten once (paths needed for the decay mask), rebuild three trees
+    pleaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    mleaves = jax.tree_util.tree_leaves(state.m)
+    vleaves = jax.tree_util.tree_leaves(state.v)
+    outs = [upd(path, p, g, m, v) for (path, p), g, m, v
+            in zip(pleaves, gleaves, mleaves, vleaves)]
+    unflat = lambda i: jax.tree_util.tree_unflatten(
+        treedef, [o[i] for o in outs])
+    new_state = AdamWState(step=step, m=unflat(1), v=unflat(2))
+    return unflat(0), new_state, {"lr": lr, "grad_norm": gnorm}

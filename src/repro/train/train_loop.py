@@ -1,0 +1,77 @@
+"""Training loop: loss, train_step factory (used by launch/train.py and the
+dry-run), and a simple host-driven loop for the runnable examples."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_opt_state)
+
+
+def lm_loss(cfg, params, tokens, frontend_emb=None, *, q_chunk=512,
+            kv_chunk=512, batch_axes=None, tp_axis=None, remat=True):
+    """Next-token cross entropy.  tokens: (B, S+1) -> predict [1:] from [:-1].
+
+    For VLM inputs the frontend patches are prepended inside `forward`; the
+    loss is computed only over the text positions (the tail of the logits).
+    """
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(cfg, params, inp, frontend_emb=frontend_emb,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk,
+                          batch_axes=batch_axes, tp_axis=tp_axis,
+                          remat=remat)
+    logits = logits[:, -inp.shape[1]:]  # drop frontend positions (VLM)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + cfg.router_aux_loss_coef * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, q_chunk=512, kv_chunk=512,
+                    batch_axes=None, tp_axis=None, remat=True) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch = {"tokens": (B, S+1) int32, ["frontend": (B, F, df)]}.
+    """
+    def train_step(params, opt_state, batch):
+        fe = batch.get("frontend")
+        (loss, met), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch["tokens"], fe,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              batch_axes=batch_axes, tp_axis=tp_axis,
+                              remat=remat),
+            has_aux=True)(params)
+        params, opt_state, opt_met = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        return params, opt_state, {"loss": loss, **met, **opt_met}
+
+    return train_step
+
+
+def train(cfg, params, data_iter, opt_cfg: AdamWConfig, num_steps: int,
+          log_every: int = 10, log_fn=print, donate: bool = True):
+    """Host loop used by the examples (single device)."""
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg),
+                      donate_argnums=(0, 1) if donate else ())
+    history = []
+    t0 = time.time()
+    for step in range(num_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, opt_state, met = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            met = {k: float(v) for k, v in met.items()}
+            met.update(step=step, elapsed=round(time.time() - t0, 2))
+            history.append(met)
+            log_fn(f"step {step:5d}  loss {met['loss']:.4f}  "
+                   f"nll {met['nll']:.4f}  lr {met['lr']:.2e}  "
+                   f"gnorm {met['grad_norm']:.3f}")
+    return params, opt_state, history

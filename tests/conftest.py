@@ -1,0 +1,6 @@
+import os
+import sys
+
+# model/test code must see the single real CPU device (the 512-device flag is
+# set ONLY inside launch/dryrun.py, never globally)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,65 @@
+"""Config registry: published parameter counts, tiny-variant constraints."""
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, get_tiny_config
+
+EXPECTED_PARAMS_B = {  # published totals (tolerance: layer-norm/bias noise)
+    "rwkv6-1.6b": (1.6, 2.2),
+    "qwen2-moe-a2.7b": (13.5, 15.0),
+    "llama3-405b": (400.0, 410.0),
+    "starcoder2-7b": (7.0, 7.8),
+    "recurrentgemma-9b": (8.5, 11.0),
+    "whisper-tiny": (0.03, 0.08),
+    "deepseek-v2-lite-16b": (14.5, 16.5),
+    "qwen2.5-32b": (31.0, 34.0),
+    "llava-next-34b": (33.0, 36.0),
+    "starcoder2-15b": (15.0, 17.0),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    assert set(EXPECTED_PARAMS_B) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS_B))
+def test_param_counts(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).num_params() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS_B))
+def test_tiny_variants(arch):
+    t = get_tiny_config(arch)
+    assert t.num_layers <= 3
+    assert t.d_model <= 512
+    if t.is_moe:
+        assert t.num_experts <= 4
+    # same family topology preserved
+    c = get_config(arch)
+    assert t.arch_type == c.arch_type
+    assert t.use_mla == c.use_mla
+    assert (t.num_experts > 0) == (c.num_experts > 0)
+    assert t.is_encoder_decoder == c.is_encoder_decoder
+    assert bool(t.layer_pattern) == bool(c.layer_pattern)
+
+
+def test_moe_active_params():
+    c = get_config("qwen2-moe-a2.7b")
+    assert 2.0e9 < c.active_params() < 3.5e9  # the "A2.7B" in the name
+
+
+def test_layer_kinds_hybrid():
+    c = get_config("recurrentgemma-9b")
+    kinds = c.layer_kinds
+    assert len(kinds) == 38
+    assert kinds[0] == "rglru" and kinds[2] == "attn"
+    assert sum(k == "attn" for k in kinds) == 12
+
+
+def test_long_context_support_flags():
+    assert not get_config("whisper-tiny").supports_long_context
+    for a in ASSIGNED:
+        if a != "whisper-tiny":
+            assert get_config(a).supports_long_context, a

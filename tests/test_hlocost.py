@@ -1,0 +1,73 @@
+"""HLO cost model: trip-count expansion, dot flops, in-place update bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlocost import hlo_cost, parse_module
+
+
+def _cost_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return hlo_cost(txt)
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    c = _cost_of(lambda a, b: a @ b, a, b)
+    assert abs(c["flops"] - 2 * 128 * 256 * 512) / c["flops"] < 0.05
+
+
+def test_scan_trip_count_expansion():
+    """flops inside lax.scan must be multiplied by the trip count."""
+    N = 17
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def f(w, x):
+        def body(h, _):
+            return h @ w, ()
+        h, _ = jax.lax.scan(body, x, None, length=N)
+        return h
+
+    c = _cost_of(f, w, x)
+    expect = 2 * 8 * 64 * 64 * N
+    assert abs(c["flops"] - expect) / expect < 0.1, c["flops"]
+
+
+def test_nested_scan_trip_counts():
+    def f(x):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ x, ()
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, ()
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    c = _cost_of(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    expect = 2 * 32 * 32 * 32 * 15
+    assert abs(c["flops"] - expect) / expect < 0.1, c["flops"]
+
+
+def test_inplace_update_bytes_not_whole_buffer():
+    """A 1-row dynamic_update_slice into a big buffer must not charge the
+    whole buffer as traffic."""
+    buf = jax.ShapeDtypeStruct((4096, 1024), jnp.float32)
+    row = jax.ShapeDtypeStruct((1, 1024), jnp.float32)
+
+    def f(buf, row):
+        return jax.lax.dynamic_update_slice(buf, row, (17, 0))
+
+    # donated buffer (as in serve_step): true in-place update
+    txt = jax.jit(f, donate_argnums=0).lower(buf, row).compile().as_text()
+    c = hlo_cost(txt)
+    whole = 4096 * 1024 * 4
+    assert c["bytes"] < whole * 0.5, c["bytes"]
+
+
+def test_parser_handles_entry():
+    txt = jax.jit(lambda x: x * 2).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
+    comps, entry = parse_module(txt)
+    assert entry is not None and entry in comps

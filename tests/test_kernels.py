@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd,dtype", [
+    (1, 4, 4, 128, 64, jnp.float32),   # MHA
+    (2, 4, 2, 256, 64, jnp.float32),   # GQA 2:1
+    (1, 8, 1, 128, 128, jnp.float32),  # MQA
+    (1, 4, 2, 128, 64, jnp.bfloat16),  # bf16
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    o = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, window=window,
+                            block_q=64, block_k=64)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (2, 4, 2, 256, 64),
+    (1, 8, 8, 128, 64),
+    (3, 4, 1, 512, 128),
+])
+def test_decode_attention_sweep(B, Hq, Hkv, S, hd):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    valid = S * 3 // 4
+    slot = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    slot = jnp.where(slot < valid, slot, -1)
+    cur = jnp.full((B,), valid - 1, jnp.int32)
+    o = ops.decode_attention(q, kc, vc, slot, cur, block_k=128)
+    o_ref = ref.decode_attention_ref(q, kc, vc, slot, cur)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_per_batch_positions():
+    """Different cur_pos per batch row (ragged decode batch)."""
+    B, Hq, Hkv, S, hd = 2, 4, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    slot = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cur = jnp.asarray([50, 100], jnp.int32)
+    o = ops.decode_attention(q, kc, vc, slot, cur, block_k=64)
+    o_ref = ref.decode_attention_ref(q, kc, vc, slot, cur)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("BH,S,D,chunk", [
+    (2, 64, 32, 16),
+    (1, 128, 64, 32),
+    (3, 96, 32, 32),  # padding path (96 % 32 == 0, uneven chunks count)
+])
+def test_rwkv6_scan_sweep(BH, S, D, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (BH, S, D)) * 0.5
+    k = jax.random.normal(ks[1], (BH, S, D)) * 0.5
+    v = jax.random.normal(ks[2], (BH, S, D)) * 0.5
+    w = -jnp.exp(jax.random.normal(ks[3], (BH, S, D)) * 0.5)
+    u = jax.random.normal(ks[4], (BH, 1, D)) * 0.3
+    o, s = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    o_ref, s_ref = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (2, 128, 64, 64, 64),
+    (1, 256, 128, 128, 64),
+])
+def test_rglru_scan_sweep(B, S, W, chunk, bw):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jax.random.normal(ks[0], (B, S, W))
+    a = -jnp.abs(jax.random.normal(ks[1], (B, S, W))) * 0.5
+    g = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, W)))
+    h0 = jax.random.normal(ks[3], (B, W)) * 0.2
+    hs, hf = ops.rglru_scan(x, a, g, h0, chunk=chunk, block_w=bw)
+    hs_ref, hf_ref = ref.rglru_scan_ref(x, a, g, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hf_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,d,f", [(2, 64, 128, 64), (4, 128, 256, 128)])
+def test_moe_gemm_sweep(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], (E, C, d)) * 0.1
+    w = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    y = ops.moe_gemm(x, w, block_c=64, block_f=64, block_d=64)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.moe_gemm_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,172 @@
+"""Scheduler + simulator behaviour tests (the paper's mechanisms)."""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AgentXPUEngine, Priority, Request, WorkloadConfig,
+                        generate_workload)
+from repro.core.engine import make_scheduler
+from repro.core.heg import HEG, KernelKind
+from repro.core.annotation import INTEL_CORE_ULTRA_5_125H
+from repro.core.preemption import ReqContext
+from repro.core.simulator import Simulator
+
+CFG = get_config("llama3.2-3b")
+HEG_ = HEG(CFG, INTEL_CORE_ULTRA_5_125H)
+
+
+def _req(i, prio, plen=256, out=8, t=0.0):
+    return Request(id=i, priority=prio, prompt_len=plen, max_new_tokens=out,
+                   arrival_time=t)
+
+
+def _run(name, reqs, **kw):
+    sched = make_scheduler(name, HEG_, **kw)
+    return Simulator(sched, copy.deepcopy(reqs), max_time=50_000.0).run()
+
+
+# -- HEG ---------------------------------------------------------------------
+def test_heg_structure():
+    nodes = HEG_.prefill_kernels(0, 300)
+    # chunked: ceil(300/chunk) chunks x num_layers x (linear [+ attn])
+    n_chunks = -(-300 // HEG_.chunk_size)
+    assert sum(1 for n in nodes if n.kind == KernelKind.LINEAR_CHUNK) == \
+        n_chunks * CFG.num_layers
+    assert sum(1 for n in nodes if n.kind == KernelKind.ATTN_DYN) == \
+        n_chunks * CFG.num_layers  # all-attention model
+    # elastic = token-level only; attention is iGPU-only (dynamic shape)
+    for n in nodes:
+        if n.kind == KernelKind.ATTN_DYN:
+            assert not n.elastic and n.ann.t_npu is None
+        else:
+            assert n.elastic and n.ann.t_npu is not None
+
+
+def test_heg_attention_free_has_no_dynamic_kernels():
+    heg = HEG(get_config("rwkv6-1.6b"), INTEL_CORE_ULTRA_5_125H)
+    nodes = heg.prefill_kernels(0, 300)
+    assert all(n.kind == KernelKind.LINEAR_CHUNK for n in nodes)
+
+
+def test_kernel_time_budget():
+    """Paper §6.2: chunking keeps prefill kernels under ~100 ms."""
+    for n in HEG_.prefill_kernels(0, 2048):
+        t = n.time_on("npu" if n.elastic else "igpu")
+        assert t < 0.1, (n.kind, t)
+
+
+# -- preemption context -------------------------------------------------------
+def test_chunk_pipeline_dependency():
+    c = ReqContext.build(_req(0, Priority.PROACTIVE, plen=HEG_.chunk_size * 3),
+                         HEG_)
+    ready = c.ready_kernels()
+    assert len(ready) == 1  # only chunk 0 may start
+    c.start(ready[0])
+    c.complete(ready[0])
+    ready = c.ready_kernels()
+    # chunk 0 kernel 1 and chunk 1 kernel 0 both issueable now
+    assert {n.chunk_idx for n in ready} == {0, 1}
+
+
+def test_discard_progress_counts_recompute():
+    c = ReqContext.build(_req(0, Priority.PROACTIVE, plen=HEG_.chunk_size * 2),
+                         HEG_)
+    for _ in range(len(c.chunk_kernels[0])):
+        n = c.ready_kernels()[0]
+        c.start(n)
+        c.complete(n)
+    assert c.prefilled_tokens() == HEG_.chunk_size
+    c.discard_progress()
+    assert c.req.recomputed_tokens == HEG_.chunk_size
+    assert c.prefilled_tokens() == 0
+
+
+# -- end-to-end policy behaviour ----------------------------------------------
+REQS_MIX = [_req(0, Priority.PROACTIVE, plen=1024, out=64, t=0.0),
+            _req(1, Priority.PROACTIVE, plen=1024, out=64, t=0.01),
+            _req(2, Priority.REACTIVE, plen=256, out=16, t=0.05)]
+
+
+@pytest.mark.parametrize("name", ["agent.xpu", "fcfs", "naive_preempt",
+                                  "timeshare", "continuous_batching"])
+def test_all_requests_complete(name):
+    m = _run(name, REQS_MIX)
+    assert len(m.completed) == len(REQS_MIX), name
+    for r in m.completed:
+        assert r.ttft is not None and r.ttft >= 0
+        assert r.finish_t >= r.arrival_time
+
+
+def test_reactive_beats_fcfs():
+    m_x = _run("agent.xpu", REQS_MIX)
+    m_f = _run("fcfs", REQS_MIX)
+    rx = [r for r in m_x.completed if r.priority == Priority.REACTIVE][0]
+    rf = [r for r in m_f.completed if r.priority == Priority.REACTIVE][0]
+    assert rx.ttft < rf.ttft  # preemption must win over FIFO
+
+
+def test_preemption_checkpoints_not_discarded():
+    # reactive arrives mid-prefill (after >=1 proactive chunk has completed)
+    reqs = [_req(0, Priority.PROACTIVE, plen=4096, out=32, t=0.0),
+            _req(1, Priority.REACTIVE, plen=256, out=16, t=0.5)]
+    m = _run("agent.xpu", reqs)
+    assert sum(r.recomputed_tokens for r in m.completed) == 0
+    m_naive = _run("naive_preempt", reqs)
+    assert sum(r.recomputed_tokens for r in m_naive.completed) > 0
+
+
+def test_reactive_latency_flat_under_load():
+    """Paper Fig 7: agent.xpu reactive latency ~constant vs proactive rate."""
+    lat = {}
+    for rate in (0.2, 1.5):
+        wl = WorkloadConfig(proactive_rate=rate, reactive_interval=12.0,
+                            horizon=120.0, seed=3)
+        m = _run("agent.xpu", generate_workload(wl))
+        lat[rate] = m.summary()["reactive_norm_latency"]
+    assert lat[1.5] < lat[0.2] * 3.0  # flat-ish, not collapsing
+
+
+def test_backfill_improves_throughput():
+    wl = WorkloadConfig(proactive_rate=1.0, reactive_interval=10.0,
+                        horizon=100.0, seed=4)
+    reqs = generate_workload(wl)
+    m_on = _run("agent.xpu", reqs)
+    m_off = _run("agent.xpu", reqs, enable_backfill=False)
+    assert m_on.summary()["tokens_per_s"] >= \
+        m_off.summary()["tokens_per_s"] * 0.95
+
+
+def test_decode_batching_bounded():
+    sched = make_scheduler("agent.xpu", HEG_)
+    sizes = []
+    orig = sched._mk_decode_batch
+
+    def spy(rids, lane="igpu"):
+        sizes.append(len(rids))
+        return orig(rids, lane)
+
+    sched._mk_decode_batch = spy
+    reqs = [_req(i, Priority.PROACTIVE, plen=64, out=32, t=0.0)
+            for i in range(40)]
+    Simulator(sched, reqs, max_time=50_000.0).run()
+    assert sizes and max(sizes) <= sched.b_max
+
+
+def test_energy_accounting_positive():
+    m = _run("agent.xpu", REQS_MIX)
+    assert m.energy_j > 0
+    s = m.summary()
+    assert 0 < s["energy_j_per_token"] < 100
+
+
+def test_starvation_prevention():
+    """A proactive task preempted early must still finish under sustained
+    reactive pressure (aging promotes it)."""
+    reqs = [_req(0, Priority.PROACTIVE, plen=4096, out=4, t=0.0)]
+    for i in range(40):
+        reqs.append(_req(1 + i, Priority.REACTIVE, plen=512, out=4,
+                         t=0.05 + i * 1.0))
+    m = _run("agent.xpu", reqs, starvation_threshold=5.0)
+    pro = [r for r in m.completed if r.priority == Priority.PROACTIVE]
+    assert pro and pro[0].finish_t is not None
