@@ -220,3 +220,39 @@ def bench_ablation() -> Tuple[List[dict], float]:
     rel = {r["variant"]: (r["reactive_norm_latency"], r["tokens_per_s"])
            for r in rows}
     return rows, full["tokens_per_s"] / max(worst_tok, 1e-9)
+
+
+# -- real-mode slot-pool batching (DESIGN.md §3) ------------------------------
+def bench_real_decode_batching() -> Tuple[List[dict], float]:
+    """Device-call efficiency of the JaxRealBackend: decode tokens generated
+    per jitted decode call (= effective batch) and total compilation count
+    under a small mixed trace of a tiny model.  Derived: tokens/call."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_tiny_config
+    from repro.core.engine import RealAgentXPUEngine
+    from repro.models import init_params
+
+    cfg = get_tiny_config("llama3-405b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        plen = int(rng.integers(16, 64))
+        reqs.append(Request(
+            id=i, priority=Priority.PROACTIVE, prompt_len=plen,
+            max_new_tokens=16, arrival_time=0.0,
+            tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+    eng = RealAgentXPUEngine(cfg, params, max_len=128)
+    m = eng.serve(reqs)
+    st = eng.stats()
+    decode_tokens = sum(r.decoded - 1 for r in m.completed)  # first tok: prefill
+    per_call = decode_tokens / max(st["decode_device_calls"], 1)
+    rows = [{"decode_tokens": decode_tokens,
+             "decode_device_calls": st["decode_device_calls"],
+             "prefill_device_calls": st["prefill_device_calls"],
+             "jit_compilations": st["jit_compilations"],
+             "pool_slots": st["pool_slots"],
+             "tokens_per_decode_call": per_call}]
+    return rows, per_call

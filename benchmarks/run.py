@@ -27,6 +27,7 @@ BENCHES = [
     ("fig6_proactive_only", figures.bench_proactive_only),
     ("fig7_mixed", figures.bench_mixed),
     ("ablation_mechanisms", figures.bench_ablation),
+    ("real_decode_batching", figures.bench_real_decode_batching),
 ]
 
 
@@ -41,7 +42,8 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
         if args.quick and name in ("fig6_proactive_only", "fig7_mixed",
-                                   "ablation_mechanisms"):
+                                   "ablation_mechanisms",
+                                   "real_decode_batching"):
             continue
         t0 = time.time()
         rows, derived = fn()

@@ -1,6 +1,7 @@
 """End-to-end agentic serving driver (deliverable (b)): a mixed
 proactive/reactive trace served with REAL batched token generation under the
-Agent.xpu scheduler, with per-class latency/throughput report.
+Agent.xpu scheduler, streamed per token, with per-class latency/throughput
+and compilation/device-call report.
 
     PYTHONPATH=src python examples/serve_agentic.py --n-proactive 6
 """
@@ -15,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_tiny_config
-from repro.core.engine import RealAgentXPUEngine
+from repro.core.engine import RealAgentXPUEngine, stream_printer
 from repro.core.requests import Priority, Request
 from repro.models import init_params
 
@@ -27,6 +28,8 @@ def main():
     ap.add_argument("--n-proactive", type=int, default=6)
     ap.add_argument("--out-tokens", type=int, default=12)
     ap.add_argument("--scheduler", default="agent.xpu")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every token as it is generated")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch)
@@ -53,7 +56,10 @@ def main():
 
     eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
                              max_len=256)
-    m = eng.serve(reqs)
+    on_token = stream_printer() if args.stream else None
+    for r in reqs:
+        eng.submit(r, on_token=on_token)
+    m = eng.run()
     s = m.summary()
     print(f"\ncompleted {len(m.completed)} requests "
           f"(sim time {m.sim_time:.2f}s)")
@@ -65,6 +71,11 @@ def main():
     print(f"\nreactive TTFT       : {s['reactive_ttft']*1e3:.1f} ms")
     print(f"proactive mean e2e  : {s['proactive_e2e']:.3f} s")
     print(f"energy              : {s['energy_j_per_token']:.2f} J/token")
+    st = eng.stats()
+    print(f"jit compilations    : {st['jit_compilations']}")
+    print(f"decode device calls : {st['decode_device_calls']} "
+          f"(one per decode iteration, pool of {st['pool_slots']} slots)")
+    print(f"prefill device calls: {st['prefill_device_calls']}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 from repro.core.annotation import (HardwareProfile, INTEL_CORE_ULTRA_5_125H,
                                    TPU_V5E_LANES, PROFILES, annotate)
+from repro.core.backend import ExecutionBackend, JaxRealBackend, SimBackend
 from repro.core.engine import AgentXPUEngine, RealAgentXPUEngine, make_scheduler
 from repro.core.heg import HEG, HEGNode, KernelKind
 from repro.core.requests import (Priority, ReqState, Request, WorkloadConfig,

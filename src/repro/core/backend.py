@@ -1,0 +1,297 @@
+"""Pluggable execution backends (DESIGN.md §2).
+
+The scheduler is execution-agnostic: it announces *kernel completions* in
+simulated-clock order and an ``ExecutionBackend`` decides what (if anything)
+actually runs.  Two implementations:
+
+  SimBackend      pure timing study — every hook is a no-op.  This module
+                  deliberately imports no JAX so the simulation-only path
+                  (``AgentXPUEngine.run_trace``) stays JAX-free.
+  JaxRealBackend  real token generation: a slot-pool KV cache shared by all
+                  decoding requests, power-of-2 bucketed prefill chunks, and
+                  one jitted masked ``decode_step`` per decode iteration
+                  regardless of batch size.
+
+Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
+
+    register(req, on_token)         request submitted (streaming callback)
+    prefill_chunk(req, start, n)    all kernels of one prompt chunk done
+    prefill_done(req)               prefill complete -> bind a decode slot
+    decode_iteration(reqs)          one batched decode iteration committed
+    finish(req)                     request done -> free its slot
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.requests import Request
+
+TokenCallback = Callable[[Request, int], None]
+
+
+class ExecutionBackend:
+    """Interface the scheduler drives through kernel-completion hooks."""
+
+    def register(self, req: Request,
+                 on_token: Optional[TokenCallback] = None) -> None:
+        pass
+
+    def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
+                      now: float) -> None:
+        pass
+
+    def prefill_done(self, req: Request, now: float) -> None:
+        pass
+
+    def decode_iteration(self, reqs: List[Request], now: float) -> None:
+        pass
+
+    def finish(self, req: Request, now: float) -> None:
+        pass
+
+    def release(self, reqs: List[Request], now: float) -> None:
+        pass
+
+    def output_tokens(self, req_id: int) -> list:
+        return []
+
+    def stats(self) -> dict:
+        return {}
+
+
+class SimBackend(ExecutionBackend):
+    """Timing-only backend: the discrete-event simulator is the execution."""
+
+    name = "sim"
+
+
+def _pow2_buckets(n: int) -> List[int]:
+    """Descending power-of-2 decomposition of a chunk length (96 -> [64, 32]):
+    any chunk is covered by O(log n) jit-compiled shapes instead of one
+    compilation per distinct (request, chunk) shape."""
+    out, b = [], 1
+    while b * 2 <= n:
+        b *= 2
+    while n > 0:
+        while b > n:
+            b //= 2
+        out.append(b)
+        n -= b
+    return out
+
+
+class JaxRealBackend(ExecutionBackend):
+    """Real execution on the shared slot-pool KV cache.
+
+    Prefill runs per-request at batch 1 against a scratch cache in pow-2
+    bucketed sub-chunks; at prefill completion the scratch state is scattered
+    into a free slot of the pool and the scratch freed.  Every decode
+    iteration is ONE jitted masked ``decode_step`` over the whole pool: slots
+    of requests not in this iteration's batch are computed but their cache
+    rows are left untouched.  The pool doubles (one recompilation) if demand
+    ever exceeds the initial slot count.
+    """
+
+    name = "jax"
+
+    def __init__(self, cfg, params, *, pool_slots: int, max_len: int = 512,
+                 dtype=None):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models import init_cache
+        if cfg.is_encoder_decoder or cfg.frontend != "none":
+            raise NotImplementedError(
+                "JaxRealBackend serves text-only decoders")
+        self._jax, self._jnp, self._np = jax, jnp, np
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.dtype = dtype or jnp.float32
+        self.pool_slots = max(int(pool_slots), 1)
+        self._pool = init_cache(cfg, params, self.pool_slots, max_len,
+                                self.dtype)
+        self._free: List[int] = list(range(self.pool_slots))
+        self._slot: Dict[int, int] = {}  # req id -> pool slot
+        self._scratch: Dict[int, object] = {}  # req id -> B=1 prefill cache
+        self._scratch_pos: Dict[int, int] = {}
+        self._first: Dict[int, int] = {}  # first token (from last chunk)
+        self._last: Dict[int, int] = {}  # last emitted token (decode input)
+        self._texts: Dict[int, list] = {}
+        self._on_token: Dict[int, TokenCallback] = {}
+        self._pool_tokens = np.zeros((self.pool_slots,), np.int32)
+        self._jit_cache: Dict[tuple, object] = {}
+        # counters (reported by examples/ and asserted by tests/test_backend)
+        self.jit_compilations = 0
+        self.decode_device_calls = 0
+        self.prefill_device_calls = 0
+
+    # -- jitted callable cache (compilation count is O(log max_len)) --------
+    def _jitted(self, key: tuple, build):
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = self._jax.jit(build())
+            self._jit_cache[key] = fn
+            self.jit_compilations += 1
+        return fn
+
+    def _extend_fn(self, c: int):
+        from repro.models import extend
+        cfg = self.cfg
+
+        def build():
+            def fn(params, cache, toks):
+                logits, cache = extend(cfg, params, cache, toks)
+                return logits.argmax(-1).astype(self._jnp.int32)[0], cache
+            return fn
+        return self._jitted(("extend", c), build)
+
+    def _decode_fn(self, pool_size: int):
+        from repro.models import decode_step
+        cfg = self.cfg
+
+        def build():
+            def fn(params, cache, toks, mask):
+                nxt, _, cache = decode_step(cfg, params, cache, toks, mask)
+                return nxt, cache
+            return fn
+        return self._jitted(("decode", pool_size), build)
+
+    def _bind_fn(self, pool_size: int):
+        from repro.models import write_slot
+
+        def build():
+            return lambda pool, one, slot: write_slot(pool, one, slot)
+        return self._jitted(("bind", pool_size), build)
+
+    # -- slot management -----------------------------------------------------
+    def _grow_pool(self):
+        from repro.models import init_cache
+        from repro.models.kvcache import _map_batched
+        old, p = self._pool, self.pool_slots
+        self.pool_slots = p * 2
+        new = init_cache(self.cfg, self.params, self.pool_slots, self.max_len,
+                         self.dtype)
+        self._pool = _map_batched(lambda n, o: n.at[:p].set(o),
+                                  lambda n, o: n.at[:, :p].set(o), new, old)
+        self._free.extend(range(p, self.pool_slots))
+        self._pool_tokens = self._np.concatenate(
+            [self._pool_tokens, self._np.zeros((p,), self._np.int32)])
+
+    def _alloc_slot(self, rid: int) -> int:
+        if not self._free:
+            self._grow_pool()
+        slot = self._free.pop(0)
+        self._slot[rid] = slot
+        return slot
+
+    # -- prefill --------------------------------------------------------------
+    def _ensure_scratch_at(self, req: Request, seq_start: int):
+        """Scratch cache positioned at ``seq_start`` — rebuilt (replaying the
+        already-prefetched prefix) after a discard-style preemption reset the
+        scheduler's chunk progress."""
+        from repro.models import init_cache
+        rid = req.id
+        if rid in self._scratch and self._scratch_pos[rid] == seq_start:
+            return
+        self._scratch[rid] = init_cache(self.cfg, self.params, 1,
+                                        self.max_len, self.dtype)
+        self._scratch_pos[rid] = 0
+        if seq_start > 0:
+            self._run_bucketed(req, 0, seq_start)
+
+    def _run_bucketed(self, req: Request, start: int, n: int):
+        rid = req.id
+        pos = start
+        for size in _pow2_buckets(n):
+            chunk = self._np.asarray(req.tokens[:, pos:pos + size],
+                                     self._np.int32)
+            fn = self._extend_fn(size)
+            nxt, self._scratch[rid] = fn(self.params, self._scratch[rid],
+                                         self._jnp.asarray(chunk))
+            self.prefill_device_calls += 1
+            pos += size
+        self._scratch_pos[rid] = pos
+        if pos >= req.prompt_len:  # last chunk -> first output token
+            self._first[rid] = int(nxt)
+
+    def register(self, req: Request,
+                 on_token: Optional[TokenCallback] = None) -> None:
+        if on_token is not None:
+            self._on_token[req.id] = on_token
+
+    def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
+                      now: float) -> None:
+        if req.tokens is None:
+            return
+        self._ensure_scratch_at(req, seq_start)
+        self._run_bucketed(req, seq_start, tokens)
+
+    def prefill_done(self, req: Request, now: float) -> None:
+        rid = req.id
+        if req.tokens is None or rid not in self._scratch:
+            return
+        slot = self._alloc_slot(rid)
+        fn = self._bind_fn(self.pool_slots)
+        self._pool = fn(self._pool, self._scratch.pop(rid),
+                        self._jnp.int32(slot))
+        self._scratch_pos.pop(rid, None)
+        first = self._first.pop(rid)
+        self._last[rid] = first
+        self._texts[rid] = [first]
+        self._emit(req, first)
+
+    # -- decode ---------------------------------------------------------------
+    def decode_iteration(self, reqs: List[Request], now: float) -> None:
+        live = [r for r in reqs if r.id in self._slot]
+        if not live:
+            return
+        mask = self._np.zeros((self.pool_slots,), bool)
+        for r in live:
+            s = self._slot[r.id]
+            mask[s] = True
+            self._pool_tokens[s] = self._last[r.id]
+        fn = self._decode_fn(self.pool_slots)
+        nxt, self._pool = fn(self.params, self._pool,
+                             self._jnp.asarray(self._pool_tokens),
+                             self._jnp.asarray(mask))
+        self.decode_device_calls += 1
+        nxt = self._np.asarray(nxt)
+        for r in live:
+            t = int(nxt[self._slot[r.id]])
+            self._last[r.id] = t
+            self._texts[r.id].append(t)
+            self._emit(r, t)
+
+    def finish(self, req: Request, now: float) -> None:
+        # release everything except _texts (output_tokens() outlives the run)
+        slot = self._slot.pop(req.id, None)
+        if slot is not None:
+            self._free.append(slot)
+        self._last.pop(req.id, None)
+        self._scratch.pop(req.id, None)
+        self._scratch_pos.pop(req.id, None)
+        self._first.pop(req.id, None)
+        self._on_token.pop(req.id, None)
+
+    def release(self, reqs: List[Request], now: float) -> None:
+        """Free resources of requests cut off mid-flight (simulation hit
+        max_time before they finished): their slot and scratch cache would
+        otherwise stay bound across subsequent runs."""
+        for r in reqs:
+            self.finish(r, now)
+
+    # -- output ----------------------------------------------------------------
+    def _emit(self, req: Request, token: int):
+        cb = self._on_token.get(req.id)
+        if cb is not None:
+            cb(req, token)
+
+    def output_tokens(self, req_id: int) -> list:
+        return self._texts.get(req_id, [])
+
+    def stats(self) -> dict:
+        return {"jit_compilations": self.jit_compilations,
+                "decode_device_calls": self.decode_device_calls,
+                "prefill_device_calls": self.prefill_device_calls,
+                "pool_slots": self.pool_slots}

@@ -24,8 +24,8 @@ class FCFSScheduler(SchedulerBase):
     name = "fcfs"
     lanes = ("igpu",)
 
-    def __init__(self, heg: HEG):
-        super().__init__(heg, b_max=1)
+    def __init__(self, heg: HEG, **kw):
+        super().__init__(heg, b_max=1, **kw)
         self.fifo: deque = deque()
 
     def on_arrival(self, req: Request, now: float):
@@ -100,8 +100,8 @@ class TimeShareScheduler(SchedulerBase):
     name = "timeshare"
     lanes = ("igpu",)
 
-    def __init__(self, heg: HEG):
-        super().__init__(heg, b_max=1)
+    def __init__(self, heg: HEG, **kw):
+        super().__init__(heg, b_max=1, **kw)
         self.rr: deque = deque()
 
     def on_arrival(self, req: Request, now: float):
@@ -134,8 +134,8 @@ class ContinuousBatchingScheduler(SchedulerBase):
     name = "continuous_batching"
     lanes = ("igpu",)
 
-    def __init__(self, heg: HEG, *, b_max: Optional[int] = None):
-        super().__init__(heg, b_max=b_max)
+    def __init__(self, heg: HEG, *, b_max: Optional[int] = None, **kw):
+        super().__init__(heg, b_max=b_max, **kw)
         self.wait: deque = deque()
 
     def on_arrival(self, req: Request, now: float):

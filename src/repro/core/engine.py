@@ -1,12 +1,11 @@
 """Agent.xpu engine facade (paper §4/§7).
 
 Offline phase: build the HEG for the model + hardware profile (op grouping,
-chunk-size knee, predictive annotation).  Online phase: run the scheduler —
-either purely simulated (timing study over a request trace: the paper-figure
-benchmarks) or in *real* mode, where every HEG chunk/decode completion
-triggers the actual jitted JAX computation so real tokens are produced under
-the paper's scheduling order (used by examples/serve_agentic.py and the
-integration tests).
+chunk-size knee, predictive annotation).  Online phase: run the scheduler
+against an ``ExecutionBackend`` (core.backend) — ``SimBackend`` for the pure
+timing study (paper-figure benchmarks; imports no JAX) or ``JaxRealBackend``
+where every HEG chunk / decode-iteration completion triggers actual jitted
+computation so real tokens stream out under the paper's scheduling order.
 
 Real-mode note: the container has one CPU core, so the two XPU lanes cannot
 physically overlap; the coordinator interleaves kernels in simulated-clock
@@ -15,28 +14,38 @@ drives two device submeshes (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.annotation import (HardwareProfile, INTEL_CORE_ULTRA_5_125H)
+from repro.core.backend import ExecutionBackend, TokenCallback
 from repro.core.baselines import BASELINES
 from repro.core.heg import HEG
-from repro.core.requests import Priority, Request
+from repro.core.requests import Request
 from repro.core.scheduler import AgentXpuScheduler, SchedulerBase
 from repro.core.simulator import Simulator, SimMetrics
 
 
-def make_scheduler(name: str, heg: HEG, **kw) -> SchedulerBase:
-    if name == "agent.xpu":
-        return AgentXpuScheduler(heg, **kw)
-    return BASELINES[name](heg, **kw) if kw else BASELINES[name](heg)
+def stream_printer(prefix: str = "  ") -> TokenCallback:
+    """Default ``on_token`` callback: print each token as it is generated
+    (shared by launch/serve.py --stream and examples/serve_agentic.py)."""
+    def on_token(req: Request, token: int):
+        print(f"{prefix}[stream] req {req.id} "
+              f"[{req.priority.name.lower():9s}] token {token}", flush=True)
+    return on_token
+
+
+def make_scheduler(name: str, heg: HEG,
+                   backend: Optional[ExecutionBackend] = None,
+                   **kw) -> SchedulerBase:
+    cls = AgentXpuScheduler if name == "agent.xpu" else BASELINES[name]
+    return cls(heg, backend=backend, **kw)
 
 
 class AgentXPUEngine:
     """Simulation-mode engine: offline HEG + online scheduling over a trace."""
+
+    backend: Optional[ExecutionBackend] = None  # None -> per-run SimBackend
 
     def __init__(self, cfg: ModelConfig,
                  hw: HardwareProfile = INTEL_CORE_ULTRA_5_125H,
@@ -46,99 +55,65 @@ class AgentXPUEngine:
         self.heg = HEG(cfg, hw)  # offline phase
         self.scheduler_name = scheduler
         self.sched_kw = sched_kw
+        self.last_trace: List[tuple] = []  # kernel-completion trace
+
+    def _run(self, requests: List[Request], max_time: float) -> SimMetrics:
+        sched = make_scheduler(self.scheduler_name, self.heg,
+                               backend=self.backend, **self.sched_kw)
+        metrics = Simulator(sched, requests, max_time=max_time).run()
+        self.last_trace = sched.trace
+        return metrics
 
     def run_trace(self, requests: List[Request],
                   max_time: float = 36_000.0) -> SimMetrics:
-        sched = make_scheduler(self.scheduler_name, self.heg,
-                               **self.sched_kw)
-        sim = Simulator(sched, requests, max_time=max_time)
-        return sim.run()
+        return self._run(requests, max_time)
 
 
 class RealAgentXPUEngine(AgentXPUEngine):
-    """Real-execution mode: the scheduler's kernel completions drive actual
-    jitted model computation (greedy decoding), so the engine emits real
-    tokens in the exact order the paper's policy would schedule them."""
+    """Real-execution mode: scheduler kernel completions drive the
+    ``JaxRealBackend`` (slot-pool KV cache, batched masked decode, streaming
+    token callbacks)."""
 
     def __init__(self, cfg: ModelConfig, params,
                  hw: HardwareProfile = INTEL_CORE_ULTRA_5_125H,
                  scheduler: str = "agent.xpu", max_len: int = 512,
-                 dtype=None, **sched_kw):
+                 dtype=None, pool_slots: Optional[int] = None, **sched_kw):
         super().__init__(cfg, hw, scheduler, **sched_kw)
-        import jax
-        import jax.numpy as jnp
-        self._jax = jax
-        self._jnp = jnp
-        self.params = params
-        self.max_len = max_len
-        self.dtype = dtype or jnp.float32
-        self._caches: Dict[int, object] = {}
-        self._texts: Dict[int, list] = {}
-        self._extend = jax.jit(
-            lambda p, c, t: __import__("repro.models", fromlist=["extend"])
-            .extend(cfg, p, c, t),
-            static_argnums=())
+        from repro.core.backend import JaxRealBackend
+        self.backend = JaxRealBackend(
+            cfg, params, pool_slots=pool_slots or self.heg.B_max,
+            max_len=max_len, dtype=dtype)
+        self._pending: List[Request] = []
 
-    # hooks called by serve()
-    def _ensure_cache(self, req: Request):
-        from repro.models import init_cache
-        if req.id not in self._caches:
-            self._caches[req.id] = init_cache(
-                self.cfg, self.params, 1, self.max_len, self.dtype)
-            self._texts[req.id] = []
+    # -- streaming flow API ---------------------------------------------------
+    def submit(self, req: Request,
+               on_token: Optional[TokenCallback] = None) -> Request:
+        """Enqueue a request; ``on_token(req, token)`` fires per generated
+        token (first token at prefill completion, then one per decode
+        iteration) during the next :meth:`run`."""
+        self.backend.register(req, on_token)
+        self._pending.append(req)
+        return req
 
-    def _run_chunk(self, req: Request, start: int, tokens: int):
-        from repro.models import extend
-        self._ensure_cache(req)
-        chunk = req.tokens[:, start:start + tokens]
-        logits, self._caches[req.id] = extend(
-            self.cfg, self.params, self._caches[req.id],
-            self._jnp.asarray(chunk))
-        if start + tokens >= req.prompt_len:  # last chunk -> first token
-            nxt = int(np.asarray(logits.argmax(-1))[0])
-            self._texts[req.id].append(nxt)
-
-    def _run_decode(self, req: Request):
-        from repro.models import extend
-        last = self._texts[req.id][-1]
-        logits, self._caches[req.id] = extend(
-            self.cfg, self.params, self._caches[req.id],
-            self._jnp.asarray([[last]], dtype=self._jnp.int32))
-        self._texts[req.id].append(int(np.asarray(logits.argmax(-1))[0]))
+    def run(self, max_time: float = 36_000.0) -> SimMetrics:
+        """Serve everything submitted since the last run."""
+        reqs, self._pending = self._pending, []
+        metrics = self._run(reqs, max_time)
+        done = {r.id for r in metrics.completed}
+        # requests cut off by max_time must not hold slots/scratch forever
+        self.backend.release([r for r in reqs if r.id not in done],
+                             metrics.sim_time)
+        return metrics
 
     def serve(self, requests: List[Request],
               max_time: float = 36_000.0) -> SimMetrics:
-        """Run the trace; every chunk/decode completion executes for real."""
-        sched = make_scheduler(self.scheduler_name, self.heg,
-                               **self.sched_kw)
-        engine = self
-
-        chunk_progress: Dict[int, Dict[int, int]] = {}
-
-        orig_complete = sched.on_complete
-
-        def on_complete(rk, now):
-            if rk.is_decode_batch:
-                for rid in rk.req_ids:
-                    c = sched.ctx.get(rid)
-                    if c is not None and c.req.tokens is not None:
-                        engine._run_decode(c.req)
-            else:
-                c = sched.ctx.get(rk.req_ids[0])
-                if c is not None and c.req.tokens is not None:
-                    prog = chunk_progress.setdefault(c.req.id, {})
-                    j = rk.node.chunk_idx
-                    n_in_chunk = len(c.chunk_kernels[j])
-                    prog[j] = prog.get(j, 0) + 1
-                    if prog[j] == n_in_chunk:  # chunk fully scheduled
-                        engine._run_chunk(c.req, rk.node.seq_start,
-                                          rk.node.tokens)
-            orig_complete(rk, now)
-
-        sched.on_complete = on_complete
-        sim = Simulator(sched, requests, max_time=max_time)
-        metrics = sim.run()
-        return metrics
+        """Replay-style entry point: submit the whole trace, then run."""
+        for r in requests:
+            self.submit(r)
+        return self.run(max_time)
 
     def output_tokens(self, req_id: int) -> list:
-        return self._texts.get(req_id, [])
+        return self.backend.output_tokens(req_id)
+
+    def stats(self) -> dict:
+        return self.backend.stats()

@@ -20,6 +20,7 @@ import enum
 from collections import deque
 from typing import Dict, List, Optional
 
+from repro.core.backend import ExecutionBackend, SimBackend
 from repro.core.contention import MemoryPressureEstimator
 from repro.core.heg import HEG, HEGNode, KernelKind
 from repro.core.preemption import ReqContext
@@ -49,7 +50,8 @@ class SchedulerBase:
     name = "base"
     lanes = ("npu", "igpu")
 
-    def __init__(self, heg: HEG, *, b_max: Optional[int] = None):
+    def __init__(self, heg: HEG, *, b_max: Optional[int] = None,
+                 backend: Optional[ExecutionBackend] = None):
         self.heg = heg
         self.hw = heg.hw
         self.rt_queue: deque = deque()  # reactive req ids
@@ -61,6 +63,8 @@ class SchedulerBase:
         self.pressure = MemoryPressureEstimator()
         self.b_max = b_max or heg.B_max
         self.done: List[Request] = []
+        self.backend: ExecutionBackend = backend or SimBackend()
+        self.trace: List[tuple] = []  # (kernel kind, req ids, sim time)
 
     # -- request lifecycle ---------------------------------------------------
     def on_arrival(self, req: Request, now: float):
@@ -77,6 +81,7 @@ class SchedulerBase:
         req.prefill_done_t = now
         req.decoded = 1  # prefill emits the first token
         req.state = ReqState.DECODE
+        self.backend.prefill_done(req, now)
         if req.decoded >= req.max_new_tokens:
             self._finish(req, now)
         else:
@@ -87,10 +92,15 @@ class SchedulerBase:
         req.finish_t = now
         self.done.append(req)
         self.ctx.pop(req.id, None)
+        self.backend.finish(req, now)
 
     def on_complete(self, rk: RunningKernel, now: float):
         self.running[rk.lane] = None
+        self.trace.append((rk.node.kind.value, tuple(rk.req_ids), now))
         if rk.is_decode_batch:
+            self.backend.decode_iteration(
+                [self.ctx[rid].req for rid in rk.req_ids if rid in self.ctx],
+                now)
             for rid in rk.req_ids:
                 c = self.ctx.get(rid)
                 if c is None:
@@ -106,6 +116,12 @@ class SchedulerBase:
         if c is None:
             return
         c.complete(rk.node)
+        j = rk.node.chunk_idx
+        if 0 <= j < len(c.chunk_kernels) \
+                and c.progress[j] == len(c.chunk_kernels[j]):
+            # all kernels of this prompt chunk are done -> materialize it
+            self.backend.prefill_chunk(c.req, rk.node.seq_start,
+                                       rk.node.tokens, now)
         if c.prefill_done and c.req.state in (ReqState.PREFILL,
                                               ReqState.QUEUED,
                                               ReqState.PREEMPTED):
@@ -171,8 +187,9 @@ class AgentXpuScheduler(SchedulerBase):
     def __init__(self, heg: HEG, *, b_max=None, enable_backfill: bool = True,
                  enable_contention: bool = True, tau_low: float = 0.4,
                  tau_high: float = 0.7, starvation_threshold: float = 30.0,
-                 reactive_offload: bool = True):
-        super().__init__(heg, b_max=b_max)
+                 reactive_offload: bool = True,
+                 backend: Optional[ExecutionBackend] = None):
+        super().__init__(heg, b_max=b_max, backend=backend)
         self.enable_backfill = enable_backfill
         self.enable_contention = enable_contention
         self.tau_low = tau_low

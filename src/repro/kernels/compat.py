@@ -1,0 +1,17 @@
+"""JAX version-compatibility shims shared by all Pallas kernels.
+
+The Pallas TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this JAX
+ships so the kernels import cleanly on either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

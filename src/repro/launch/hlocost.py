@@ -111,7 +111,10 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
             i += 1
         operand_str = rest[:i - 1]
         attrs = rest[i:]
-        operands = [o.strip().lstrip("%") for o in _split_top(operand_str)]
+        # newer XLA prints operands with their shape inline
+        # ("f32[128,256]{1,0} %Arg_0.1"): the name is the last token
+        operands = [o.strip().split()[-1].lstrip("%")
+                    for o in _split_top(operand_str) if o.strip()]
         cur.ops.append(Op(name, shape, opcode, operands, attrs,
                           is_root=line.startswith("ROOT")))
         cur.symbols[name] = shape

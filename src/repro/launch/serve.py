@@ -36,6 +36,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true",
                     help="actually generate tokens (tiny model)")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --real: print tokens as they are generated")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -50,8 +52,7 @@ def main(argv=None):
         import jax
         import jax.numpy as jnp
         from repro.models import init_params
-        cfg = get_tiny_config(args.arch) if args.arch != "llama3.2-3b" \
-            else get_tiny_config("llama3-405b")
+        cfg = get_tiny_config(args.arch)
         params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
         rng = np.random.default_rng(args.seed)
         for r in reqs:
@@ -60,7 +61,16 @@ def main(argv=None):
             r.tokens = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
         eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
                                  max_len=256)
-        metrics = eng.serve(reqs)
+        from repro.core.engine import stream_printer
+        on_token = stream_printer() if args.stream else None
+        for r in reqs:
+            eng.submit(r, on_token=on_token)
+        metrics = eng.run()
+        if not args.json:
+            st = eng.stats()
+            print(f"[real] {st['jit_compilations']} jit compilations, "
+                  f"{st['decode_device_calls']} decode device calls, "
+                  f"{st['pool_slots']} pool slots")
     else:
         cfg = get_config(args.arch)
         eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],

@@ -71,3 +71,45 @@ def init_layer_state(cfg, kind: str, batch: int, max_len: int,
 def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(cache))
+
+
+# ============================ slot-pool helpers =============================
+# A *slot pool* is an ordinary cache (init_cache) whose batch dimension is a
+# pool of independent decode slots: requests are bound to a slot when their
+# prefill completes and freed when they finish, so one masked decode step
+# serves the whole pool in a single device call (DESIGN.md §3).
+#
+# The batch axis is 0 for the "pos"/"head"/"tail"/"enc_out" sections but 1
+# for "blocks" (scanned groups carry a leading repeats axis), so the helpers
+# below map section-aware functions over cache pytrees.
+
+def _map_batched(fn0, fn1, *caches):
+    """tree_map ``fn0`` over batch-axis-0 sections and ``fn1`` over the
+    batch-axis-1 ``blocks`` section of one or more structurally-equal caches."""
+    out = dict(caches[0])
+    for key in ("pos", "head", "tail", "enc_out"):
+        if key in caches[0]:
+            out[key] = jax.tree_util.tree_map(fn0, *[c[key] for c in caches])
+    out["blocks"] = jax.tree_util.tree_map(fn1, *[c["blocks"] for c in caches])
+    return out
+
+
+def write_slot(pool, one, slot):
+    """Scatter a batch-1 cache into batch row ``slot`` of the pool cache
+    (prefill-to-decode handoff).  ``slot`` may be a traced int32."""
+    return _map_batched(lambda p, o: p.at[slot].set(o[0]),
+                        lambda p, o: p.at[:, slot].set(o[:, 0]),
+                        pool, one)
+
+
+def select_rows(mask, new, old):
+    """Masked cache update: row ``b`` of the result is ``new``'s where
+    ``mask[b]`` else ``old``'s — inactive slots of a pooled decode step keep
+    their state (KV ring buffers, recurrent states, positions) untouched."""
+    def sel(axis):
+        def f(n, o):
+            m = mask.reshape((1,) * axis + (-1,)
+                             + (1,) * (n.ndim - axis - 1))
+            return jnp.where(m, n, o)
+        return f
+    return _map_batched(sel(0), sel(1), new, old)

@@ -709,6 +709,21 @@ def extend(cfg, params, cache, tokens, *, window=None, frontend_emb=None,
     return lm_logits(x_last, params), new_cache
 
 
+def decode_step(cfg, params, cache, tokens, active, **kw):
+    """One masked decode iteration over a slot-pool cache (DESIGN.md §3).
+
+    tokens: (B,) int32 last token per pool slot; active: (B,) bool slot mask.
+    All B rows are computed (static shape => one compiled kernel per pool
+    size), but cache rows with ``active == False`` are left untouched, so
+    unbound / not-dispatched slots neither corrupt their KV state nor advance
+    their position.  Returns (next_tokens (B,), logits (B, V), new_cache)
+    with greedy next tokens computed on-device.
+    """
+    logits, new_cache = extend(cfg, params, cache, tokens[:, None], **kw)
+    new_cache = kvcache.select_rows(active, new_cache, cache)
+    return logits.argmax(-1).astype(jnp.int32), logits, new_cache
+
+
 def prefill(cfg, params, tokens, *, max_len=None, window=None,
             frontend_emb=None, dtype=jnp.bfloat16, q_chunk=512, kv_chunk=512,
             capacity_factor=1.25, batch_axes=None, tp_axis=None):
