@@ -28,6 +28,7 @@ BENCHES = [
     ("fig7_mixed", figures.bench_mixed),
     ("ablation_mechanisms", figures.bench_ablation),
     ("real_decode_batching", figures.bench_real_decode_batching),
+    ("decode_throughput", figures.bench_decode_throughput),
 ]
 
 
@@ -35,15 +36,23 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow end-to-end sweeps")
+    ap.add_argument("--only", default=None,
+                    help="run a single named benchmark (e.g. "
+                         "decode_throughput for the BENCH_decode.json entry)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args(argv)
 
     os.makedirs(args.out, exist_ok=True)
+    if args.only is not None and args.only not in dict(BENCHES):
+        raise SystemExit(f"unknown benchmark {args.only!r}; "
+                         f"choose from {[n for n, _ in BENCHES]}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
-        if args.quick and name in ("fig6_proactive_only", "fig7_mixed",
-                                   "ablation_mechanisms",
-                                   "real_decode_batching"):
+        if args.only is not None and name != args.only:
+            continue
+        if args.only is None and args.quick and name in (
+                "fig6_proactive_only", "fig7_mixed", "ablation_mechanisms",
+                "real_decode_batching", "decode_throughput"):
             continue
         t0 = time.time()
         rows, derived = fn()

@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--scheduler", default="agent.xpu")
     ap.add_argument("--stream", action="store_true",
                     help="print every token as it is generated")
+    ap.add_argument("--max-fused-steps", type=int, default=32,
+                    help="cap on fused decode run length (1 = no fusion)")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch)
@@ -55,7 +57,8 @@ def main():
         tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
 
     eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
-                             max_len=256)
+                             max_len=256,
+                             max_fused_steps=args.max_fused_steps)
     on_token = stream_printer() if args.stream else None
     for r in reqs:
         eng.submit(r, on_token=on_token)
@@ -72,9 +75,15 @@ def main():
     print(f"proactive mean e2e  : {s['proactive_e2e']:.3f} s")
     print(f"energy              : {s['energy_j_per_token']:.2f} J/token")
     st = eng.stats()
+    decode_tokens = sum(r.decoded - 1 for r in m.completed)
     print(f"jit compilations    : {st['jit_compilations']}")
-    print(f"decode device calls : {st['decode_device_calls']} "
-          f"(one per decode iteration, pool of {st['pool_slots']} slots)")
+    print(f"decode device calls : {st['decode_device_calls']} for "
+          f"{decode_tokens} decode tokens "
+          f"(pool of {st['pool_slots']} slots)")
+    print(f"fused decode steps  : {st['fused_steps']} "
+          f"in {st['fused_runs']} lax.scan runs")
+    print(f"host syncs          : {st['host_syncs']} "
+          f"(one per fused run boundary, not per token)")
     print(f"prefill device calls: {st['prefill_device_calls']}")
 
 

@@ -1,4 +1,4 @@
-"""Pluggable execution backends (DESIGN.md §2).
+"""Pluggable execution backends (DESIGN.md §2, §6).
 
 The scheduler is execution-agnostic: it announces *kernel completions* in
 simulated-clock order and an ``ExecutionBackend`` decides what (if anything)
@@ -7,22 +7,29 @@ actually runs.  Two implementations:
   SimBackend      pure timing study — every hook is a no-op.  This module
                   deliberately imports no JAX so the simulation-only path
                   (``AgentXPUEngine.run_trace``) stays JAX-free.
-  JaxRealBackend  real token generation: a slot-pool KV cache shared by all
-                  decoding requests, power-of-2 bucketed prefill chunks, and
-                  one jitted masked ``decode_step`` per decode iteration
-                  regardless of batch size.
+  JaxRealBackend  real token generation on a device-resident slot-pool KV
+                  cache: all inference callables donate their pool buffers
+                  (in-place update, no per-call copy), per-slot last tokens
+                  and the batch mask live on device, and scheduler-announced
+                  fused runs execute many decode iterations as one jitted
+                  ``lax.scan`` with a single host sync at the boundary.
 
 Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
 
     register(req, on_token)         request submitted (streaming callback)
     prefill_chunk(req, start, n)    all kernels of one prompt chunk done
     prefill_done(req)               prefill complete -> bind a decode slot
+    decode_run(reqs, n_steps)       scheduler guarantees the decode batch is
+                                    membership-stable for n_steps iterations
+                                    (the event horizon) -> fused execution
     decode_iteration(reqs)          one batched decode iteration committed
+                                    (replays from the fused block if present)
     finish(req)                     request done -> free its slot
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.requests import Request
 
@@ -41,6 +48,13 @@ class ExecutionBackend:
         pass
 
     def prefill_done(self, req: Request, now: float) -> None:
+        pass
+
+    def decode_run(self, reqs: List[Request], n_steps: int,
+                   now: float) -> None:
+        """Scheduler announcement: the coming ``n_steps`` decode iterations
+        will run with exactly this membership (no arrival/completion/finish
+        can change the batch before they commit)."""
         pass
 
     def decode_iteration(self, reqs: List[Request], now: float) -> None:
@@ -70,6 +84,8 @@ def _pow2_buckets(n: int) -> List[int]:
     any chunk is covered by O(log n) jit-compiled shapes instead of one
     compilation per distinct (request, chunk) shape."""
     out, b = [], 1
+    if n <= 0:
+        return out
     while b * 2 <= n:
         b *= 2
     while n > 0:
@@ -80,22 +96,42 @@ def _pow2_buckets(n: int) -> List[int]:
     return out
 
 
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 class JaxRealBackend(ExecutionBackend):
-    """Real execution on the shared slot-pool KV cache.
+    """Real execution on a device-resident slot-pool KV cache.
 
     Prefill runs per-request at batch 1 against a scratch cache in pow-2
     bucketed sub-chunks; at prefill completion the scratch state is scattered
-    into a free slot of the pool and the scratch freed.  Every decode
-    iteration is ONE jitted masked ``decode_step`` over the whole pool: slots
-    of requests not in this iteration's batch are computed but their cache
-    rows are left untouched.  The pool doubles (one recompilation) if demand
-    ever exceeds the initial slot count.
+    into a free slot of the pool and the scratch freed.  Decode state —
+    the KV pool, each slot's last emitted token, and the active-slot mask —
+    stays on device between scheduler events:
+
+    * every jitted inference callable donates its cache/pool (and token
+      state) arguments, so the pool is updated in place instead of copied
+      per call;
+    * host -> device traffic is reduced to small jitted scatter updates when
+      a slot binds/frees or the batch membership changes;
+    * a scheduler-announced ``decode_run(reqs, n_steps)`` executes as O(log
+      n_steps) jitted ``lax.scan`` programs (pow-2 run lengths), and the
+      resulting ``(n_steps, pool)`` token block is fetched to host ONCE;
+      subsequent ``decode_iteration`` hooks replay tokens from the block, so
+      per-token ``on_token`` callbacks and output bookkeeping still happen
+      at the simulated-clock instant of each iteration.
+
+    The pool doubles (one recompilation) if demand ever exceeds the initial
+    slot count; growth rebuilds all donated buffers from fresh arrays.
     """
 
     name = "jax"
 
     def __init__(self, cfg, params, *, pool_slots: int, max_len: int = 512,
-                 dtype=None):
+                 dtype=None, device_resident: bool = True):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -106,31 +142,49 @@ class JaxRealBackend(ExecutionBackend):
         self._jax, self._jnp, self._np = jax, jnp, np
         self.cfg = cfg
         self.params = params
+        # device_resident=False restores the pre-donation hot path (no buffer
+        # donation, per-iteration host rebuild + upload of the batch state,
+        # no fused runs) — kept as the measurable baseline of
+        # benchmarks.figures.bench_decode_throughput's perf trajectory
+        self.device_resident = device_resident
         self.max_len = max_len
         self.dtype = dtype or jnp.float32
         self.pool_slots = max(int(pool_slots), 1)
         self._pool = init_cache(cfg, params, self.pool_slots, max_len,
                                 self.dtype)
-        self._free: List[int] = list(range(self.pool_slots))
+        self._free: Deque[int] = deque(range(self.pool_slots))
         self._slot: Dict[int, int] = {}  # req id -> pool slot
         self._scratch: Dict[int, object] = {}  # req id -> B=1 prefill cache
         self._scratch_pos: Dict[int, int] = {}
         self._first: Dict[int, int] = {}  # first token (from last chunk)
-        self._last: Dict[int, int] = {}  # last emitted token (decode input)
+        self._last: Dict[int, int] = {}  # host mirror of last emitted token
         self._texts: Dict[int, list] = {}
         self._on_token: Dict[int, TokenCallback] = {}
-        self._pool_tokens = np.zeros((self.pool_slots,), np.int32)
+        # device-resident batch state (DESIGN.md §6): last token per slot and
+        # the current iteration's membership mask, mutated only by small
+        # jitted scatters / the decode calls themselves
+        self._toks = jnp.zeros((self.pool_slots,), jnp.int32)
+        self._mask = jnp.zeros((self.pool_slots,), bool)
+        self._mask_host = np.zeros((self.pool_slots,), bool)  # mirror
+        # fused-run replay buffer: host token block + committed membership
+        self._fused_rows: Deque = deque()
+        self._fused_slots: Optional[frozenset] = None
         self._jit_cache: Dict[tuple, object] = {}
         # counters (reported by examples/ and asserted by tests/test_backend)
         self.jit_compilations = 0
         self.decode_device_calls = 0
         self.prefill_device_calls = 0
+        self.host_syncs = 0  # device->host token fetches
+        self.fused_steps = 0  # decode iterations served from fused runs
+        self.fused_runs = 0
 
     # -- jitted callable cache (compilation count is O(log max_len)) --------
-    def _jitted(self, key: tuple, build):
+    def _jitted(self, key: tuple, build, donate=()):
         fn = self._jit_cache.get(key)
         if fn is None:
-            fn = self._jax.jit(build())
+            if not self.device_resident:
+                donate = ()  # legacy mode: every call copies its pool
+            fn = self._jax.jit(build(), donate_argnums=donate)
             self._jit_cache[key] = fn
             self.jit_compilations += 1
         return fn
@@ -144,46 +198,101 @@ class JaxRealBackend(ExecutionBackend):
                 logits, cache = extend(cfg, params, cache, toks)
                 return logits.argmax(-1).astype(self._jnp.int32)[0], cache
             return fn
-        return self._jitted(("extend", c), build)
+        return self._jitted(("extend", c), build, donate=(1,))
 
     def _decode_fn(self, pool_size: int):
         from repro.models import decode_step
         cfg = self.cfg
+        jnp = self._jnp
 
         def build():
             def fn(params, cache, toks, mask):
                 nxt, _, cache = decode_step(cfg, params, cache, toks, mask)
-                return nxt, cache
+                return nxt, jnp.where(mask, nxt, toks), cache
             return fn
-        return self._jitted(("decode", pool_size), build)
+        return self._jitted(("decode", pool_size), build, donate=(1, 2))
+
+    def _decode_run_fn(self, pool_size: int, n_steps: int):
+        from repro.models import decode_run
+        cfg = self.cfg
+
+        def build():
+            def fn(params, cache, toks, mask):
+                block, toks, cache = decode_run(cfg, params, cache, toks,
+                                                mask, n_steps)
+                return block, toks, cache
+            return fn
+        return self._jitted(("decode_run", pool_size, n_steps), build,
+                            donate=(1, 2))
 
     def _bind_fn(self, pool_size: int):
         from repro.models import write_slot
 
         def build():
-            return lambda pool, one, slot: write_slot(pool, one, slot)
-        return self._jitted(("bind", pool_size), build)
+            def fn(pool, one, slot, toks, first):
+                return write_slot(pool, one, slot), toks.at[slot].set(first)
+            return fn
+        # the B=1 scratch (arg 1) is NOT donated: its buffers can never be
+        # reused for the B=pool outputs, so donating it only emits warnings
+        return self._jitted(("bind", pool_size), build, donate=(0, 3))
+
+    def _clear_fn(self, pool_size: int):
+        def build():
+            def fn(toks, mask, slot):
+                return toks.at[slot].set(0), mask.at[slot].set(False)
+            return fn
+        return self._jitted(("clear", pool_size), build, donate=(0, 1))
+
+    def _mask_update_fn(self, pool_size: int, k: int):
+        def build():
+            def fn(mask, idx, val):
+                return mask.at[idx].set(val, mode="drop")
+            return fn
+        return self._jitted(("mask", pool_size, k), build, donate=(0,))
 
     # -- slot management -----------------------------------------------------
     def _grow_pool(self):
-        from repro.models import init_cache
-        from repro.models.kvcache import _map_batched
+        from repro.models import copy_into_prefix, init_cache
+        jnp, np = self._jnp, self._np
         old, p = self._pool, self.pool_slots
         self.pool_slots = p * 2
         new = init_cache(self.cfg, self.params, self.pool_slots, self.max_len,
                          self.dtype)
-        self._pool = _map_batched(lambda n, o: n.at[:p].set(o),
-                                  lambda n, o: n.at[:, :p].set(o), new, old)
+        # un-jitted on purpose: builds fresh (donation-safe) buffers
+        self._pool = copy_into_prefix(new, old, p)
         self._free.extend(range(p, self.pool_slots))
-        self._pool_tokens = self._np.concatenate(
-            [self._pool_tokens, self._np.zeros((p,), self._np.int32)])
+        self._toks = jnp.concatenate(
+            [self._toks, jnp.zeros((p,), jnp.int32)])
+        self._mask = jnp.concatenate([self._mask, jnp.zeros((p,), bool)])
+        self._mask_host = np.concatenate(
+            [self._mask_host, np.zeros((p,), bool)])
 
     def _alloc_slot(self, rid: int) -> int:
         if not self._free:
             self._grow_pool()
-        slot = self._free.pop(0)
+        slot = self._free.popleft()
         self._slot[rid] = slot
         return slot
+
+    def _sync_mask(self, slots: List[int]):
+        """Push the iteration's membership to the device mask as a (usually
+        empty) scatter of changed entries, pow-2 padded with out-of-range
+        indices so the update compiles O(log pool) programs total."""
+        np = self._np
+        want = np.zeros((self.pool_slots,), bool)
+        want[slots] = True
+        diff = np.nonzero(want != self._mask_host)[0]
+        if len(diff) == 0:
+            return
+        k = _next_pow2(len(diff))
+        idx = np.full((k,), self.pool_slots, np.int32)  # pad: dropped
+        val = np.zeros((k,), bool)
+        idx[:len(diff)] = diff
+        val[:len(diff)] = want[diff]
+        fn = self._mask_update_fn(self.pool_slots, k)
+        self._mask = fn(self._mask, self._jnp.asarray(idx),
+                        self._jnp.asarray(val))
+        self._mask_host = want
 
     # -- prefill --------------------------------------------------------------
     def _ensure_scratch_at(self, req: Request, seq_start: int):
@@ -201,6 +310,8 @@ class JaxRealBackend(ExecutionBackend):
             self._run_bucketed(req, 0, seq_start)
 
     def _run_bucketed(self, req: Request, start: int, n: int):
+        if n <= 0:  # zero-length chunk: nothing ran, ``nxt`` never exists
+            return
         rid = req.id
         pos = start
         for size in _pow2_buckets(n):
@@ -214,6 +325,7 @@ class JaxRealBackend(ExecutionBackend):
         self._scratch_pos[rid] = pos
         if pos >= req.prompt_len:  # last chunk -> first output token
             self._first[rid] = int(nxt)
+            self.host_syncs += 1
 
     def register(self, req: Request,
                  on_token: Optional[TokenCallback] = None) -> None:
@@ -229,36 +341,93 @@ class JaxRealBackend(ExecutionBackend):
 
     def prefill_done(self, req: Request, now: float) -> None:
         rid = req.id
-        if req.tokens is None or rid not in self._scratch:
+        # the _first guard covers a prefill made entirely of zero-length
+        # chunks: no forward pass ran, so there is no token to bind a slot on
+        if req.tokens is None or rid not in self._scratch \
+                or rid not in self._first:
             return
         slot = self._alloc_slot(rid)
         fn = self._bind_fn(self.pool_slots)
-        self._pool = fn(self._pool, self._scratch.pop(rid),
-                        self._jnp.int32(slot))
-        self._scratch_pos.pop(rid, None)
         first = self._first.pop(rid)
+        self._pool, self._toks = fn(self._pool, self._scratch.pop(rid),
+                                    self._jnp.int32(slot), self._toks,
+                                    self._jnp.int32(first))
+        self._scratch_pos.pop(rid, None)
         self._last[rid] = first
         self._texts[rid] = [first]
         self._emit(req, first)
 
     # -- decode ---------------------------------------------------------------
+    def decode_run(self, reqs: List[Request], n_steps: int,
+                   now: float) -> None:
+        """Execute the whole membership-stable run now; buffer the token
+        block for per-iteration replay (one host sync per run)."""
+        live = [r for r in reqs if r.id in self._slot]
+        if not live or n_steps <= 1 or not self.device_resident:
+            return
+        slots = [self._slot[r.id] for r in live]
+        self._sync_mask(slots)
+        blocks = []
+        for n in _pow2_buckets(int(n_steps)):
+            fn = self._decode_run_fn(self.pool_slots, n)
+            block, self._toks, self._pool = fn(self.params, self._pool,
+                                               self._toks, self._mask)
+            self.decode_device_calls += 1
+            blocks.append(block)
+        full = self._np.asarray(self._jnp.concatenate(blocks, axis=0))
+        self.host_syncs += 1
+        self._fused_rows = deque(full)
+        self._fused_slots = frozenset(slots)
+        self.fused_runs += 1
+        self.fused_steps += int(n_steps)
+
     def decode_iteration(self, reqs: List[Request], now: float) -> None:
         live = [r for r in reqs if r.id in self._slot]
         if not live:
             return
-        mask = self._np.zeros((self.pool_slots,), bool)
-        for r in live:
-            s = self._slot[r.id]
-            mask[s] = True
-            self._pool_tokens[s] = self._last[r.id]
+        if self._fused_rows:
+            self._replay_row(live)
+            return
+        slots = [self._slot[r.id] for r in live]
+        if self.device_resident:
+            self._sync_mask(slots)
+            toks, mask = self._toks, self._mask
+        else:
+            # legacy (pre-donation) hot path: rebuild the batch state on the
+            # host and re-upload it every iteration
+            np = self._np
+            mask_h = np.zeros((self.pool_slots,), bool)
+            toks_h = np.zeros((self.pool_slots,), np.int32)
+            for r in live:
+                s = self._slot[r.id]
+                mask_h[s] = True
+                toks_h[s] = self._last[r.id]
+            toks, mask = self._jnp.asarray(toks_h), self._jnp.asarray(mask_h)
         fn = self._decode_fn(self.pool_slots)
-        nxt, self._pool = fn(self.params, self._pool,
-                             self._jnp.asarray(self._pool_tokens),
-                             self._jnp.asarray(mask))
+        nxt, self._toks, self._pool = fn(self.params, self._pool, toks, mask)
         self.decode_device_calls += 1
         nxt = self._np.asarray(nxt)
+        self.host_syncs += 1
+        self._commit(live, nxt)
+
+    def _replay_row(self, live: List[Request]):
+        """One committed iteration of an already-executed fused run: tokens
+        come from the buffered block — no device call, no host sync."""
+        slots = frozenset(self._slot[r.id] for r in live)
+        if slots != self._fused_slots:
+            raise RuntimeError(
+                "decode batch membership diverged from the announced fused "
+                f"run (planned slots {sorted(self._fused_slots)}, got "
+                f"{sorted(slots)}) — the scheduler's event horizon must be "
+                "a guaranteed lower bound")
+        row = self._fused_rows.popleft()
+        if not self._fused_rows:
+            self._fused_slots = None
+        self._commit(live, row)
+
+    def _commit(self, live: List[Request], tokens_by_slot):
         for r in live:
-            t = int(nxt[self._slot[r.id]])
+            t = int(tokens_by_slot[self._slot[r.id]])
             self._last[r.id] = t
             self._texts[r.id].append(t)
             self._emit(r, t)
@@ -267,6 +436,17 @@ class JaxRealBackend(ExecutionBackend):
         # release everything except _texts (output_tokens() outlives the run)
         slot = self._slot.pop(req.id, None)
         if slot is not None:
+            if self._fused_slots is not None and slot in self._fused_slots:
+                # a planned member vanished mid-run (release cut-off): the
+                # remaining buffered rows are stale
+                self._fused_rows.clear()
+                self._fused_slots = None
+            # clear the slot's last-token / mask state so a stale token can
+            # never leak into a future bind's first masked step
+            fn = self._clear_fn(self.pool_slots)
+            self._toks, self._mask = fn(self._toks, self._mask,
+                                        self._jnp.int32(slot))
+            self._mask_host[slot] = False
             self._free.append(slot)
         self._last.pop(req.id, None)
         self._scratch.pop(req.id, None)
@@ -280,6 +460,8 @@ class JaxRealBackend(ExecutionBackend):
         otherwise stay bound across subsequent runs."""
         for r in reqs:
             self.finish(r, now)
+        self._fused_rows.clear()  # uncommitted fused tokens are dropped
+        self._fused_slots = None
 
     # -- output ----------------------------------------------------------------
     def _emit(self, req: Request, token: int):
@@ -294,4 +476,7 @@ class JaxRealBackend(ExecutionBackend):
         return {"jit_compilations": self.jit_compilations,
                 "decode_device_calls": self.decode_device_calls,
                 "prefill_device_calls": self.prefill_device_calls,
+                "host_syncs": self.host_syncs,
+                "fused_steps": self.fused_steps,
+                "fused_runs": self.fused_runs,
                 "pool_slots": self.pool_slots}

@@ -51,7 +51,8 @@ class SchedulerBase:
     lanes = ("npu", "igpu")
 
     def __init__(self, heg: HEG, *, b_max: Optional[int] = None,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 max_fused_steps: int = 32):
         self.heg = heg
         self.hw = heg.hw
         self.rt_queue: deque = deque()  # reactive req ids
@@ -65,6 +66,13 @@ class SchedulerBase:
         self.done: List[Request] = []
         self.backend: ExecutionBackend = backend or SimBackend()
         self.trace: List[tuple] = []  # (kernel kind, req ids, sim time)
+        # fused decode run (§6.3 stage elasticity / DESIGN.md §6): while a
+        # plan is active the decode batch membership is committed for
+        # ``left`` more iterations, so the backend may run them all on
+        # device in one shot.  max_fused_steps bounds how long a newly
+        # decode-ready request can wait to join the batch (1 = no fusion).
+        self.max_fused_steps = max(int(max_fused_steps), 1)
+        self._fused_plan: Optional[dict] = None  # {"order": tuple, "left": n}
 
     # -- request lifecycle ---------------------------------------------------
     def on_arrival(self, req: Request, now: float):
@@ -110,6 +118,10 @@ class SchedulerBase:
                     if rid in self.decode_ready:
                         self.decode_ready.remove(rid)
                     self._finish(c.req, now)
+            if self._fused_plan is not None:
+                self._fused_plan["left"] -= 1
+                if self._fused_plan["left"] <= 0:
+                    self._fused_plan = None
             return
         rid = rk.req_ids[0]
         c = self.ctx.get(rid)
@@ -138,6 +150,11 @@ class SchedulerBase:
 
     def _mk_decode_batch(self, rids: List[int], lane: str = "igpu"
                          ) -> RunningKernel:
+        if self._fused_plan is not None:
+            # a fused run is in flight on the real backend: the announced
+            # membership is committed until it drains (the horizon guarantees
+            # none of these requests can finish before then)
+            rids = list(self._fused_plan["order"])
         kv_lens = []
         for rid in rids:
             r = self.ctx[rid].req
@@ -154,12 +171,43 @@ class SchedulerBase:
     def _start(self, rk: RunningKernel, now: float) -> RunningKernel:
         rk.started = now
         self.running[rk.lane] = rk
-        if not rk.is_decode_batch:
+        if rk.is_decode_batch:
+            self._maybe_fuse(rk, now)
+        else:
             c = self.ctx[rk.req_ids[0]]
             c.start(rk.node)
             if c.req.state == ReqState.QUEUED:
                 c.req.state = ReqState.PREFILL
         return rk
+
+    # -- fused decode runs (DESIGN.md §6) ------------------------------------
+    def _decode_horizon(self, rids: List[int]) -> int:
+        """Event horizon: a GUARANTEED lower bound on how many consecutive
+        decode iterations run with exactly this membership.  Membership only
+        changes through a prefill completion (new request joins), a batch
+        member hitting ``max_new_tokens``, or batch re-formation admitting a
+        waiting decode-ready request — so fusion is safe iff every live
+        request is already in the batch, and then bounded by the first
+        member to finish.  Future *arrivals* are handled by commitment: the
+        plan pins membership until it drains (their prefill still overlaps;
+        only their decode join waits, at most ``max_fused_steps``)."""
+        if not rids:
+            return 1
+        if set(self.ctx) - set(rids):
+            return 1  # someone is still prefilling / waiting to join
+        steps = min(self.ctx[r].req.max_new_tokens - self.ctx[r].req.decoded
+                    for r in rids)
+        return max(1, min(steps, self.max_fused_steps))
+
+    def _maybe_fuse(self, rk: RunningKernel, now: float):
+        if self._fused_plan is not None:
+            return
+        n = self._decode_horizon(rk.req_ids)
+        if n > 1:
+            self._fused_plan = {"order": tuple(rk.req_ids), "left": n}
+            self.backend.decode_run(
+                [self.ctx[r].req for r in rk.req_ids if r in self.ctx],
+                n, now)
 
     def _reactive_active(self) -> Optional[ReqContext]:
         for rid in self.rt_queue:
@@ -188,8 +236,10 @@ class AgentXpuScheduler(SchedulerBase):
                  enable_contention: bool = True, tau_low: float = 0.4,
                  tau_high: float = 0.7, starvation_threshold: float = 30.0,
                  reactive_offload: bool = True,
-                 backend: Optional[ExecutionBackend] = None):
-        super().__init__(heg, b_max=b_max, backend=backend)
+                 backend: Optional[ExecutionBackend] = None,
+                 max_fused_steps: int = 32):
+        super().__init__(heg, b_max=b_max, backend=backend,
+                         max_fused_steps=max_fused_steps)
         self.enable_backfill = enable_backfill
         self.enable_contention = enable_contention
         self.tau_low = tau_low
@@ -369,6 +419,8 @@ class AgentXpuScheduler(SchedulerBase):
     def _form_decode_batch(self) -> List[int]:
         """Reactive decodes always join; fill with proactive up to B_max,
         preferring power efficiency (shorter remaining output first)."""
+        if self._fused_plan is not None:
+            return list(self._fused_plan["order"])
         rts = [r for r in self.decode_ready
                if self.ctx[r].req.priority == Priority.REACTIVE]
         bes = [r for r in self.decode_ready

@@ -38,6 +38,9 @@ def main(argv=None):
                     help="actually generate tokens (tiny model)")
     ap.add_argument("--stream", action="store_true",
                     help="with --real: print tokens as they are generated")
+    ap.add_argument("--max-fused-steps", type=int, default=32,
+                    help="with --real: cap on fused decode run length "
+                         "(1 disables fusion — per-iteration device calls)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -60,7 +63,8 @@ def main(argv=None):
             r.max_new_tokens = min(r.max_new_tokens, 16)
             r.tokens = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
         eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
-                                 max_len=256)
+                                 max_len=256,
+                                 max_fused_steps=args.max_fused_steps)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -70,6 +74,9 @@ def main(argv=None):
             st = eng.stats()
             print(f"[real] {st['jit_compilations']} jit compilations, "
                   f"{st['decode_device_calls']} decode device calls, "
+                  f"{st['host_syncs']} host syncs, "
+                  f"{st['fused_steps']} fused decode steps "
+                  f"in {st['fused_runs']} runs, "
                   f"{st['pool_slots']} pool slots")
     else:
         cfg = get_config(args.arch)

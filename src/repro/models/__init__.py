@@ -1,9 +1,10 @@
-from repro.models.transformer import (decode_step, extend, forward, init_cache,
-                                      init_params, layout, prefill)
-from repro.models.kvcache import select_rows, write_slot
+from repro.models.transformer import (decode_run, decode_step, extend, forward,
+                                      init_cache, init_params, layout, prefill)
+from repro.models.kvcache import copy_into_prefix, select_rows, write_slot
 from repro.models.params import (batch_pspec, cache_pspecs, param_pspecs,
                                  param_shardings)
 
-__all__ = ["decode_step", "extend", "forward", "init_cache", "init_params",
-           "layout", "prefill", "select_rows", "write_slot", "batch_pspec",
-           "cache_pspecs", "param_pspecs", "param_shardings"]
+__all__ = ["copy_into_prefix", "decode_run", "decode_step", "extend",
+           "forward", "init_cache", "init_params", "layout", "prefill",
+           "select_rows", "write_slot", "batch_pspec", "cache_pspecs",
+           "param_pspecs", "param_shardings"]

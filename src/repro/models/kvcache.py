@@ -102,6 +102,18 @@ def write_slot(pool, one, slot):
                         pool, one)
 
 
+def copy_into_prefix(new, old, p):
+    """Copy the ``p`` batch rows of pool cache ``old`` into the first ``p``
+    rows of the (larger) freshly-initialized pool ``new`` (pool doubling).
+
+    Runs un-jitted on purpose: pool growth is the one place where donated
+    decode buffers must NOT be consumed — ``old`` may be the backend's live
+    pool, and ``.at[].set`` outside jit always materializes fresh arrays, so
+    the grown pool is safe to donate from the next decode call onward."""
+    return _map_batched(lambda n, o: n.at[:p].set(o),
+                        lambda n, o: n.at[:, :p].set(o), new, old)
+
+
 def select_rows(mask, new, old):
     """Masked cache update: row ``b`` of the result is ``new``'s where
     ``mask[b]`` else ``old``'s — inactive slots of a pooled decode step keep

@@ -724,6 +724,31 @@ def decode_step(cfg, params, cache, tokens, active, **kw):
     return logits.argmax(-1).astype(jnp.int32), logits, new_cache
 
 
+def decode_run(cfg, params, cache, tokens, active, n_steps: int, **kw):
+    """``n_steps`` fused masked decode iterations under ONE ``lax.scan``
+    (DESIGN.md §6).
+
+    Between scheduler-visible events the decode batch is fixed, so there is
+    no reason to return to Python per token: the scan keeps the KV pool, the
+    per-slot last tokens and the greedy feedback loop on device and emits the
+    whole ``(n_steps, B)`` token block at the boundary.  Inactive slots are
+    masked exactly as in :func:`decode_step`, so a fused run is token-exact
+    against ``n_steps`` separate ``decode_step`` calls.
+
+    tokens: (B,) int32 last token per pool slot; active: (B,) bool.
+    Returns (token_block (n_steps, B), final_tokens (B,), new_cache).
+    """
+    def body(carry, _):
+        cache, toks = carry
+        nxt, _, cache = decode_step(cfg, params, cache, toks, active, **kw)
+        toks = jnp.where(active, nxt, toks)
+        return (cache, toks), nxt
+
+    (cache, toks), block = jax.lax.scan(body, (cache, tokens), None,
+                                        length=int(n_steps))
+    return block, toks, cache
+
+
 def prefill(cfg, params, tokens, *, max_len=None, window=None,
             frontend_emb=None, dtype=jnp.bfloat16, q_chunk=512, kv_chunk=512,
             capacity_factor=1.25, batch_axes=None, tp_axis=None):

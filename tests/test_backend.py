@@ -68,8 +68,9 @@ def test_sim_and_real_traces_identical():
 
 
 def test_decode_batch_is_one_device_call():
-    """A decode iteration over B batched requests is ONE jitted call."""
-    cfg, params, eng = _tiny_real_engine()
+    """Per-step mode (max_fused_steps=1): a decode iteration over B batched
+    requests is ONE jitted call — the pre-fusion contract stays testable."""
+    cfg, params, eng = _tiny_real_engine(max_fused_steps=1)
     rng = np.random.default_rng(1)
     n, out = 4, 6
     reqs = _mk_requests(cfg, rng, [0.0] * n, [12, 13, 14, 15], out)
@@ -81,11 +82,95 @@ def test_decode_batch_is_one_device_call():
     n_iters = sum(1 for kind, _, _ in eng.last_trace
                   if kind == "decode_step")
     assert st["decode_device_calls"] == n_iters
+    assert st["fused_steps"] == 0  # fusion disabled in this mode
     # batching must beat one-call-per-request-per-token (seed behaviour)
     decode_tokens = sum(len(r)
                         for r in (eng.output_tokens(q.id) for q in reqs)) - n
     assert 0 < st["decode_device_calls"] < decode_tokens
     # and the batch really formed: fewer iterations than decoded tokens
+
+
+def test_fused_runs_beat_per_step_and_stay_exact():
+    """Fused decode runs (the default) are token-exact vs. the per-step
+    path and the unscheduled reference, with strictly fewer device calls
+    and host syncs than decode iterations / tokens."""
+    cfg, params, eng_fused = _tiny_real_engine()
+    _, _, eng_step = _tiny_real_engine(max_fused_steps=1)
+    rng = np.random.default_rng(11)
+    n, out = 4, 12
+    reqs = _mk_requests(cfg, rng, [0.0] * n, [12, 13, 14, 15], out)
+    for r in reqs:
+        r.priority = Priority.PROACTIVE
+    eng_fused.serve(copy.deepcopy(reqs))
+    eng_step.serve(copy.deepcopy(reqs))
+    for r in reqs:
+        ref = _reference_tokens(cfg, params, r.tokens, out, 128)
+        assert eng_fused.output_tokens(r.id) == ref, f"req {r.id}"
+        assert eng_step.output_tokens(r.id) == ref, f"req {r.id}"
+    stf, sts = eng_fused.stats(), eng_step.stats()
+    n_iters = sum(1 for kind, _, _ in eng_fused.last_trace
+                  if kind == "decode_step")
+    decode_tokens = sum(len(eng_fused.output_tokens(r.id))
+                        for r in reqs) - n
+    assert stf["fused_steps"] > 0 and stf["fused_runs"] > 0
+    assert stf["decode_device_calls"] < n_iters  # fused: < 1 call/iteration
+    assert stf["decode_device_calls"] < sts["decode_device_calls"]
+    assert stf["host_syncs"] < sts["host_syncs"]
+    # steady state (all flows decoding): < 1 device call and < 1 host sync
+    # per generated decode token (acceptance criterion)
+    assert stf["decode_device_calls"] < decode_tokens
+    assert stf["host_syncs"] - n < decode_tokens  # n prefill-token fetches
+
+
+def test_fused_run_crosses_growth_and_mid_finish():
+    """Fused runs interleave with pool growth and end exactly at the first
+    mid-run max_new_tokens finish; outputs stay token-exact throughout."""
+    cfg, params, eng = _tiny_real_engine(pool_slots=2)
+    rng = np.random.default_rng(13)
+    # 3 concurrent requests on a 2-slot pool (forces a growth) with
+    # *different* output lengths (forces plans to end at each finish)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.0, 0.0], [12, 14, 16], 6)
+    outs = [6, 9, 13]
+    for r, o in zip(reqs, outs):
+        r.priority = Priority.PROACTIVE
+        r.max_new_tokens = o
+    eng.serve(copy.deepcopy(reqs))
+    st = eng.stats()
+    assert st["pool_slots"] == 4  # grew past the initial 2
+    assert st["fused_steps"] > 0  # fusion engaged despite growth/finishes
+    for r, o in zip(reqs, outs):
+        ref = _reference_tokens(cfg, params, r.tokens, o, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+
+
+def test_legacy_mode_is_token_exact():
+    """``device_resident=False`` (the benchmark's pre-donation baseline)
+    must stay token-exact: same outputs, no donation, no fusion."""
+    cfg, params, eng = _tiny_real_engine(device_resident=False)
+    rng = np.random.default_rng(19)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.01], [14, 12], 4)
+    eng.serve(copy.deepcopy(reqs))
+    st = eng.stats()
+    assert st["fused_steps"] == 0
+    for r in reqs:
+        ref = _reference_tokens(cfg, params, r.tokens, 4, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+
+
+def test_run_bucketed_zero_length_chunk():
+    """Regression: a zero-length prefill chunk used to hit a latent
+    NameError (``_pow2_buckets(0) == []`` left ``nxt`` unbound)."""
+    from repro.core.backend import _pow2_buckets as pb
+    assert pb(0) == []
+    cfg, params, eng = _tiny_real_engine()
+    rng = np.random.default_rng(17)
+    (req,) = _mk_requests(cfg, rng, [0.0], [12], 3)
+    backend = eng.backend
+    backend.prefill_chunk(req, 0, 0, 0.0)  # must be a no-op, not a crash
+    # the request still prefils/decodes exactly afterwards
+    eng.serve([copy.deepcopy(req)])
+    ref = _reference_tokens(cfg, params, req.tokens, 3, 128)
+    assert eng.output_tokens(req.id) == ref
 
 
 def test_slot_reuse_matches_sequential_reference():
@@ -97,6 +182,17 @@ def test_slot_reuse_matches_sequential_reference():
     eng.serve(copy.deepcopy(reqs))
     assert eng.stats()["pool_slots"] == 2  # reuse, not growth
     for r in reqs:
+        ref = _reference_tokens(cfg, params, r.tokens, 5, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    # donation must survive engine reuse: a third wave on the SAME engine
+    # rebinds slots whose pool rows were donated in-place and whose
+    # last-token state was cleared at finish
+    wave3 = _mk_requests(cfg, rng, [0.0, 0.01], [15, 13], 5)
+    for i, r in enumerate(wave3):
+        r.id = 100 + i
+    eng.serve(copy.deepcopy(wave3))
+    assert eng.stats()["pool_slots"] == 2
+    for r in wave3:
         ref = _reference_tokens(cfg, params, r.tokens, 5, 128)
         assert eng.output_tokens(r.id) == ref, f"req {r.id}"
 
