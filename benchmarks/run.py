@@ -29,6 +29,7 @@ BENCHES = [
     ("ablation_mechanisms", figures.bench_ablation),
     ("real_decode_batching", figures.bench_real_decode_batching),
     ("decode_throughput", figures.bench_decode_throughput),
+    ("prefill_throughput", figures.bench_prefill_throughput),
 ]
 
 
@@ -52,7 +53,8 @@ def main(argv=None) -> None:
             continue
         if args.only is None and args.quick and name in (
                 "fig6_proactive_only", "fig7_mixed", "ablation_mechanisms",
-                "real_decode_batching", "decode_throughput"):
+                "real_decode_batching", "decode_throughput",
+                "prefill_throughput"):
             continue
         t0 = time.time()
         rows, derived = fn()

@@ -84,7 +84,11 @@ def main():
           f"in {st['fused_runs']} lax.scan runs")
     print(f"host syncs          : {st['host_syncs']} "
           f"(one per fused run boundary, not per token)")
-    print(f"prefill device calls: {st['prefill_device_calls']}")
+    print(f"prefill device calls: {st['prefill_device_calls']} "
+          f"({st['prefill_host_syncs']} host syncs — one per request)")
+    print(f"bind scatters       : {st['bind_device_calls']} "
+          f"(0 = zero-copy in-pool prefill)")
+    print(f"prefill KV written  : {st['kv_bytes_prefill']} bytes")
 
 
 if __name__ == "__main__":

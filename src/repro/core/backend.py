@@ -16,9 +16,12 @@ actually runs.  Two implementations:
 
 Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
 
-    register(req, on_token)         request submitted (streaming callback)
+    register(req, on_token)         request submitted (streaming callback,
+                                    prompt tokens uploaded to device once)
     prefill_chunk(req, start, n)    all kernels of one prompt chunk done
-    prefill_done(req)               prefill complete -> bind a decode slot
+                                    (first chunk allocates the pool slot:
+                                    slot lifetime starts at prefill START)
+    prefill_done(req)               prefill complete -> first token emitted
     decode_run(reqs, n_steps)       scheduler guarantees the decode batch is
                                     membership-stable for n_steps iterations
                                     (the event horizon) -> fused execution
@@ -106,9 +109,17 @@ def _next_pow2(n: int) -> int:
 class JaxRealBackend(ExecutionBackend):
     """Real execution on a device-resident slot-pool KV cache.
 
-    Prefill runs per-request at batch 1 against a scratch cache in pow-2
-    bucketed sub-chunks; at prefill completion the scratch state is scattered
-    into a free slot of the pool and the scratch freed.  Decode state —
+    Prefill is *in-pool and zero-copy* (DESIGN.md §7): the pool slot is
+    allocated at prefill START, the reused row is invalidated in place
+    (``kvcache.reset_row`` — slot_pos mask flip, not a KV rewrite), and
+    every pow-2 bucketed sub-chunk runs ``models.extend_row`` against the
+    donated pool, so prompt KV is written exactly once, straight into the
+    live row.  Prompt tokens are uploaded once at ``register`` (pow-2
+    padded) and sliced on device per sub-chunk; the first output token is
+    fetched in ONE host sync at ``prefill_done``.  ``in_pool_prefill=False``
+    preserves the previous flow — per-request B=1 scratch cache, per-chunk
+    host token uploads, and a full-row ``write_slot`` bind scatter at
+    ``prefill_done`` — as the measurable baseline.  Decode state —
     the KV pool, each slot's last emitted token, and the active-slot mask —
     stays on device between scheduler events:
 
@@ -131,7 +142,8 @@ class JaxRealBackend(ExecutionBackend):
     name = "jax"
 
     def __init__(self, cfg, params, *, pool_slots: int, max_len: int = 512,
-                 dtype=None, device_resident: bool = True):
+                 dtype=None, device_resident: bool = True,
+                 in_pool_prefill: Optional[bool] = None):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -147,6 +159,14 @@ class JaxRealBackend(ExecutionBackend):
         # no fused runs) — kept as the measurable baseline of
         # benchmarks.figures.bench_decode_throughput's perf trajectory
         self.device_resident = device_resident
+        # in_pool_prefill=False restores the scratch-cache + bind-scatter
+        # prefill (double KV write) — the measurable baseline of
+        # benchmarks.figures.bench_prefill_throughput (BENCH_prefill.json).
+        # The default follows device_resident: in-pool prefill leans on
+        # donation (without it every sub-chunk would copy the whole pool),
+        # and the legacy baseline predates in-pool prefill anyway.
+        self.in_pool_prefill = device_resident if in_pool_prefill is None \
+            else in_pool_prefill
         self.max_len = max_len
         self.dtype = dtype or jnp.float32
         self.pool_slots = max(int(pool_slots), 1)
@@ -160,6 +180,22 @@ class JaxRealBackend(ExecutionBackend):
         self._last: Dict[int, int] = {}  # host mirror of last emitted token
         self._texts: Dict[int, list] = {}
         self._on_token: Dict[int, TokenCallback] = {}
+        # in-pool prefill state: device-resident prompt tokens (uploaded once
+        # at register, pow-2 padded), per-request row progress, and the
+        # not-yet-fetched first-token device scalar of a finished prefill
+        self._tok_dev: Dict[int, object] = {}
+        self._row_pos: Dict[int, int] = {}
+        self._nxt_dev: Dict[int, object] = {}
+        # KV-traffic accounting (BENCH_prefill.json): bytes one prompt token
+        # adds to a B=1 cache, and the bytes a full-row bind scatter moves.
+        # eval_shape: count bytes from abstract shapes, no device allocation.
+        from repro.models import cache_bytes
+
+        def _bytes(one_max_len):
+            return cache_bytes(jax.eval_shape(
+                lambda: init_cache(cfg, params, 1, one_max_len, self.dtype)))
+        self._kv_token_bytes = _bytes(1) - _bytes(0)
+        self._bind_row_bytes = _bytes(max_len)
         # device-resident batch state (DESIGN.md §6): last token per slot and
         # the current iteration's membership mask, mutated only by small
         # jitted scatters / the decode calls themselves
@@ -177,6 +213,9 @@ class JaxRealBackend(ExecutionBackend):
         self.host_syncs = 0  # device->host token fetches
         self.fused_steps = 0  # decode iterations served from fused runs
         self.fused_runs = 0
+        self.prefill_host_syncs = 0  # first-token fetches (1 per prefill)
+        self.bind_device_calls = 0  # full-row bind scatters (0 in-pool)
+        self.kv_bytes_prefill = 0  # prompt-phase KV bytes written
 
     # -- jitted callable cache (compilation count is O(log max_len)) --------
     def _jitted(self, key: tuple, build, donate=()):
@@ -235,6 +274,66 @@ class JaxRealBackend(ExecutionBackend):
         # the B=1 scratch (arg 1) is NOT donated: its buffers can never be
         # reused for the B=pool outputs, so donating it only emits warnings
         return self._jitted(("bind", pool_size), build, donate=(0, 3))
+
+    def _prefill_chunk_fn(self, pool_size: int, sizes: tuple, tok_len: int,
+                          *, kv_limit: int, fresh: bool, emit: bool):
+        """In-pool prefill of (up to two) pow-2 sub-chunks as ONE jitted
+        program over the donated pool, slicing tokens on device from the
+        request's resident (1, tok_len) buffer.  No per-chunk host upload,
+        no host sync; steady-state HEG chunks are a single pow-2 bucket, so
+        a prompt chunk costs one or two device calls total.  ``sizes`` is
+        capped at two buckets so the jit-key space stays the bounded
+        O(log^2) of PR 1's shape bucketing — never one program per distinct
+        chunk length.  Host-known row progress makes the statics cheap:
+
+          kv_limit  static pow-2 bound on the row's live prefix after this
+                    call: attention scores O(live prefix) keys, not
+                    O(max_len) — early prompt chunks do a fraction of a
+                    full-ring extend's attention work (the position-
+                    oblivious scratch baseline always pays the full ring)
+          fresh     first chunk of a (re)bound row — invalidate the
+                    previous occupant first (``kvcache.reset_row``:
+                    slot_pos flip + small state zeroing, NOT a KV rewrite)
+          emit      last chunk — also commit the first output token to the
+                    device-resident per-slot token vector (replaces the old
+                    bind-time scatter; the host fetches it once at
+                    prefill_done)
+        """
+        from repro.models import (extend, extend_row, read_row, reset_row,
+                                  truncate_rings, write_row_slice)
+        cfg = self.cfg
+        jax, jnp = self._jax, self._jnp
+        max_len = self.max_len
+
+        def build():
+            def fn(params, pool, toks_vec, tok_buf, start, slot):
+                if fresh:
+                    pool = reset_row(pool, slot)
+                if len(sizes) == 1:
+                    chunk = jax.lax.dynamic_slice(
+                        tok_buf, (jnp.int32(0), start), (1, sizes[0]))
+                    logits, pool = extend_row(cfg, params, pool, chunk, slot,
+                                              kv_limit=kv_limit,
+                                              full_alloc=max_len)
+                else:
+                    # bucket pair: gather/truncate the row view once, extend
+                    # per bucket, write the whole span back once
+                    view = truncate_rings(read_row(pool, slot), kv_limit,
+                                          max_len)
+                    off = 0
+                    for c in sizes:
+                        chunk = jax.lax.dynamic_slice(
+                            tok_buf, (jnp.int32(0), start + off), (1, c))
+                        logits, view = extend(cfg, params, view, chunk)
+                        off += c
+                    pool = write_row_slice(pool, view, slot, start, off)
+                nxt = logits.argmax(-1).astype(jnp.int32)[0]
+                if emit:
+                    toks_vec = toks_vec.at[slot].set(nxt)
+                return nxt, toks_vec, pool
+            return fn
+        return self._jitted(("prefill_chunk", pool_size, sizes, tok_len,
+                             kv_limit, fresh, emit), build, donate=(1, 2))
 
     def _clear_fn(self, pool_size: int):
         def build():
@@ -323,36 +422,128 @@ class JaxRealBackend(ExecutionBackend):
             self.prefill_device_calls += 1
             pos += size
         self._scratch_pos[rid] = pos
+        self.kv_bytes_prefill += n * self._kv_token_bytes
         if pos >= req.prompt_len:  # last chunk -> first output token
             self._first[rid] = int(nxt)
             self.host_syncs += 1
+            self.prefill_host_syncs += 1
+
+    # -- in-pool prefill (DESIGN.md §7) ---------------------------------------
+    def _upload_prompt(self, req: Request):
+        """Device-resident prompt tokens: uploaded ONCE per request, padded
+        to the next power of two (O(log) distinct shapes), sliced on device
+        per sub-chunk — no per-chunk host round trip."""
+        rid = req.id
+        buf = self._tok_dev.get(rid)
+        if buf is None:
+            np = self._np
+            toks = np.asarray(req.tokens, np.int32).reshape(1, -1)
+            pad = np.zeros((1, _next_pow2(max(toks.shape[1], 1))), np.int32)
+            pad[:, :toks.shape[1]] = toks
+            buf = self._tok_dev[rid] = self._jnp.asarray(pad)
+        return buf
+
+    def _ensure_row_at(self, req: Request, seq_start: int):
+        """Pool row positioned at ``seq_start``: the slot is allocated at
+        prefill START and its reused row invalidated by the next chunk's
+        ``fresh`` program; a discard-style preemption that reset the
+        scheduler's chunk progress re-invalidates the row and replays the
+        already-prefetched prefix."""
+        rid = req.id
+        if rid in self._slot and self._row_pos.get(rid) == seq_start:
+            return
+        if rid not in self._slot:
+            self._alloc_slot(rid)
+        self._row_pos[rid] = None  # sentinel: next bucket resets the row
+        self._nxt_dev.pop(rid, None)
+        if seq_start > 0:
+            self._run_bucketed_in_pool(req, 0, seq_start)
+
+    def _run_bucketed_in_pool(self, req: Request, start: int, n: int):
+        if n <= 0:  # zero-length chunk: nothing ran, nothing to dispatch
+            return
+        rid = req.id
+        jnp = self._jnp
+        buf = self._upload_prompt(req)
+        buckets = _pow2_buckets(n)
+        # group buckets in pairs: one device call per group, jit-key space
+        # stays bounded (see _prefill_chunk_fn)
+        groups = [tuple(buckets[i:i + 2]) for i in range(0, len(buckets), 2)]
+        fresh = self._row_pos.get(rid) is None
+        pos = start
+        for sizes in groups:
+            gstart, pos = pos, pos + sum(sizes)
+            fn = self._prefill_chunk_fn(self.pool_slots, sizes, buf.shape[1],
+                                        kv_limit=_next_pow2(pos),
+                                        fresh=fresh,
+                                        emit=pos >= req.prompt_len)
+            nxt, self._toks, self._pool = fn(self.params, self._pool,
+                                             self._toks, buf,
+                                             jnp.int32(gstart),
+                                             jnp.int32(self._slot[rid]))
+            self.prefill_device_calls += 1
+            fresh = False
+        self._row_pos[rid] = pos
+        self.kv_bytes_prefill += n * self._kv_token_bytes
+        if pos >= req.prompt_len:
+            # keep the first output token on device: ONE host sync per
+            # request happens at prefill_done, not per chunk
+            self._nxt_dev[rid] = nxt
 
     def register(self, req: Request,
                  on_token: Optional[TokenCallback] = None) -> None:
         if on_token is not None:
             self._on_token[req.id] = on_token
+        if self.in_pool_prefill and req.tokens is not None:
+            self._upload_prompt(req)
 
     def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
                       now: float) -> None:
         if req.tokens is None:
             return
-        self._ensure_scratch_at(req, seq_start)
-        self._run_bucketed(req, seq_start, tokens)
+        if self.in_pool_prefill:
+            self._ensure_row_at(req, seq_start)
+            self._run_bucketed_in_pool(req, seq_start, tokens)
+        else:
+            self._ensure_scratch_at(req, seq_start)
+            self._run_bucketed(req, seq_start, tokens)
 
     def prefill_done(self, req: Request, now: float) -> None:
         rid = req.id
-        # the _first guard covers a prefill made entirely of zero-length
-        # chunks: no forward pass ran, so there is no token to bind a slot on
-        if req.tokens is None or rid not in self._scratch \
-                or rid not in self._first:
-            return
-        slot = self._alloc_slot(rid)
-        fn = self._bind_fn(self.pool_slots)
-        first = self._first.pop(rid)
-        self._pool, self._toks = fn(self._pool, self._scratch.pop(rid),
-                                    self._jnp.int32(slot), self._toks,
-                                    self._jnp.int32(first))
-        self._scratch_pos.pop(rid, None)
+        if self.in_pool_prefill:
+            if req.tokens is None or rid not in self._slot:
+                return
+            nxt = self._nxt_dev.pop(rid, None)
+            if nxt is None:
+                # prefill made entirely of zero-length chunks: no program
+                # ran (so the row still holds its PREVIOUS occupant's state
+                # — every rebind must run, and runs, the ``fresh`` reset)
+                # and there is no token to decode on; return the never
+                # masked-in slot to the free list
+                self._free.append(self._slot.pop(rid))
+                self._row_pos.pop(rid, None)
+                return
+            # the last chunk's ``emit`` program already committed the first
+            # token to the device token vector; fetch it once for streaming
+            first = int(nxt)
+            self.host_syncs += 1
+            self.prefill_host_syncs += 1
+            self._row_pos.pop(rid, None)
+        else:
+            # the _first guard covers a prefill made entirely of zero-length
+            # chunks: no forward ran, so there is no token to bind a slot on
+            if req.tokens is None or rid not in self._scratch \
+                    or rid not in self._first:
+                return
+            slot = self._alloc_slot(rid)
+            fn = self._bind_fn(self.pool_slots)
+            first = self._first.pop(rid)
+            self._pool, self._toks = fn(self._pool, self._scratch.pop(rid),
+                                        self._jnp.int32(slot), self._toks,
+                                        self._jnp.int32(first))
+            self._scratch_pos.pop(rid, None)
+            self.bind_device_calls += 1
+            self.kv_bytes_prefill += self._bind_row_bytes
         self._last[rid] = first
         self._texts[rid] = [first]
         self._emit(req, first)
@@ -453,6 +644,9 @@ class JaxRealBackend(ExecutionBackend):
         self._scratch_pos.pop(req.id, None)
         self._first.pop(req.id, None)
         self._on_token.pop(req.id, None)
+        self._tok_dev.pop(req.id, None)
+        self._row_pos.pop(req.id, None)
+        self._nxt_dev.pop(req.id, None)
 
     def release(self, reqs: List[Request], now: float) -> None:
         """Free resources of requests cut off mid-flight (simulation hit
@@ -479,4 +673,7 @@ class JaxRealBackend(ExecutionBackend):
                 "host_syncs": self.host_syncs,
                 "fused_steps": self.fused_steps,
                 "fused_runs": self.fused_runs,
+                "prefill_host_syncs": self.prefill_host_syncs,
+                "bind_device_calls": self.bind_device_calls,
+                "kv_bytes_prefill": self.kv_bytes_prefill,
                 "pool_slots": self.pool_slots}

@@ -72,26 +72,30 @@ class AgentXPUEngine:
 class RealAgentXPUEngine(AgentXPUEngine):
     """Real-execution mode: scheduler kernel completions drive the
     ``JaxRealBackend`` (device-resident slot-pool KV cache with buffer
-    donation, batched masked decode, scheduler-announced fused multi-step
-    decode runs, streaming token callbacks).
+    donation, zero-copy in-pool prefill, batched masked decode,
+    scheduler-announced fused multi-step decode runs, streaming token
+    callbacks).
 
     Host<->device synchronization happens only at scheduler-visible
-    boundaries: within a fused run the generated token block is fetched
-    once, and per-token ``on_token`` callbacks replay from it
-    (``max_fused_steps=1`` restores the per-iteration path)."""
+    boundaries: prefill fetches one first token per request, and within a
+    fused decode run the generated token block is fetched once with
+    per-token ``on_token`` callbacks replaying from it
+    (``max_fused_steps=1`` restores the per-iteration path;
+    ``in_pool_prefill=False`` the scratch+bind prefill)."""
 
     def __init__(self, cfg: ModelConfig, params,
                  hw: HardwareProfile = INTEL_CORE_ULTRA_5_125H,
                  scheduler: str = "agent.xpu", max_len: int = 512,
                  dtype=None, pool_slots: Optional[int] = None,
                  max_fused_steps: int = 32, device_resident: bool = True,
-                 **sched_kw):
+                 in_pool_prefill: Optional[bool] = None, **sched_kw):
         super().__init__(cfg, hw, scheduler,
                          max_fused_steps=max_fused_steps, **sched_kw)
         from repro.core.backend import JaxRealBackend
         self.backend = JaxRealBackend(
             cfg, params, pool_slots=pool_slots or self.heg.B_max,
-            max_len=max_len, dtype=dtype, device_resident=device_resident)
+            max_len=max_len, dtype=dtype, device_resident=device_resident,
+            in_pool_prefill=in_pool_prefill)
         self._pending: List[Request] = []
 
     # -- streaming flow API ---------------------------------------------------

@@ -96,6 +96,13 @@ class SchedulerBase:
             self.decode_ready.append(req.id)
 
     def _finish(self, req: Request, now: float):
+        """Retire a request.  Slot lifetime spans PREFILL (the real backend
+        allocates the pool slot at prefill start, DESIGN.md §7), so every
+        path that drops a request — completion here, or the engine's
+        ``backend.release`` for requests cut off mid-prefill by max_time —
+        must reach ``backend.finish`` to return the slot; a discard-style
+        preemption (scheme (a)) instead keeps the slot and replays the row
+        on the next ``prefill_chunk``."""
         req.state = ReqState.DONE
         req.finish_t = now
         self.done.append(req)

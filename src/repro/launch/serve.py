@@ -41,6 +41,18 @@ def main(argv=None):
     ap.add_argument("--max-fused-steps", type=int, default=32,
                     help="with --real: cap on fused decode run length "
                          "(1 disables fusion — per-iteration device calls)")
+    ap.add_argument("--pool-slots", type=int, default=None,
+                    help="with --real: KV slot-pool size (default: the "
+                         "HEG batching knee B_max; doubles on demand)")
+    ap.add_argument("--no-device-resident", action="store_true",
+                    help="with --real: disable buffer donation / on-device "
+                         "batch state / fused runs, and fall back to "
+                         "scratch+bind prefill (the full pre-donation "
+                         "baseline of BENCH_decode.json)")
+    ap.add_argument("--no-in-pool-prefill", action="store_true",
+                    help="with --real: prefill into a per-request scratch "
+                         "cache and bind-scatter it at completion (double "
+                         "KV write; baseline of BENCH_prefill.json)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -62,9 +74,14 @@ def main(argv=None):
             r.prompt_len = min(r.prompt_len, 96)
             r.max_new_tokens = min(r.max_new_tokens, 16)
             r.tokens = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
-        eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
-                                 max_len=256,
-                                 max_fused_steps=args.max_fused_steps)
+        eng = RealAgentXPUEngine(
+            cfg, params, scheduler=args.scheduler, max_len=256,
+            pool_slots=args.pool_slots,
+            max_fused_steps=args.max_fused_steps,
+            device_resident=not args.no_device_resident,
+            # None follows device_resident (in-pool prefill leans on
+            # donation; --no-device-resident restores the full legacy flow)
+            in_pool_prefill=False if args.no_in_pool_prefill else None)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -78,6 +95,10 @@ def main(argv=None):
                   f"{st['fused_steps']} fused decode steps "
                   f"in {st['fused_runs']} runs, "
                   f"{st['pool_slots']} pool slots")
+            print(f"[real] prefill: {st['prefill_device_calls']} device "
+                  f"calls, {st['prefill_host_syncs']} host syncs, "
+                  f"{st['bind_device_calls']} bind scatters, "
+                  f"{st['kv_bytes_prefill']} KV bytes written")
     else:
         cfg = get_config(args.arch)
         eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],

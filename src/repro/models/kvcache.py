@@ -102,6 +102,117 @@ def write_slot(pool, one, slot):
                         pool, one)
 
 
+def read_row(pool, slot):
+    """Batch-1 *row view* of pool row ``slot`` — the gather that lets any
+    whole-cache function (``models.extend``) run against a single pool row.
+    ``slot`` may be a traced int32.  Inside one jitted function whose pool
+    argument is donated, a ``read_row`` -> update -> ``write_row_slice``
+    round trip keeps all other rows aliased in place, so in-pool prefill
+    (DESIGN.md §7) writes each chunk's KV into the live pool exactly once."""
+    import jax.lax as lax
+    return _map_batched(lambda p: lax.dynamic_slice_in_dim(p, slot, 1, axis=0),
+                        lambda p: lax.dynamic_slice_in_dim(p, slot, 1, axis=1),
+                        pool)
+
+
+_ATTN_PAYLOAD = frozenset({"k", "v", "c", "kr", "xk", "xv"})
+_RING_PAYLOAD = frozenset({"k", "v", "c", "kr", "slot_pos"})
+
+
+def write_row_slice(pool, one, slot, start, c):
+    """Row-targeted chunk write-back (in-pool prefill, DESIGN.md §7):
+    scatter ONLY the ``c`` ring-buffer positions ``[start, start+c)`` (mod
+    alloc, tail-clipped exactly like the extend write itself) of batch-1
+    cache ``one`` into pool row ``slot``, plus the small non-positional
+    state (``pos``, recurrent/shift/conv).  Per chunk this moves O(c) KV
+    bytes instead of O(alloc); the full-row ``write_slot`` scatter remains
+    only in the scratch+bind baseline.  ``slot``/``start`` may be traced."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    def fix(axis):
+        def f(path, p, o):
+            name = path[-1].key if isinstance(path[-1], DictKey) else ""
+            if name in _RING_PAYLOAD:
+                alloc = p.shape[axis + 1]
+                n = min(c, alloc)
+                idx = (start + (c - n) + jnp.arange(n)) % alloc
+                if axis == 0:
+                    return p.at[slot, idx].set(o[0, idx])
+                return p.at[:, slot, idx].set(o[:, 0, idx])
+            return p.at[slot].set(o[0]) if axis == 0 \
+                else p.at[:, slot].set(o[:, 0])
+        return f
+
+    out = dict(pool)
+    out["pos"] = pool["pos"].at[slot].set(one["pos"][0])
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix(0), pool[key], one[key])
+    out["blocks"] = tree_map_with_path(fix(1), pool["blocks"], one["blocks"])
+    return out
+
+
+def truncate_rings(one, kv_limit, full):
+    """Static prefix view of a batch-1 cache for in-pool prefill: ring
+    leaves that can never wrap during prefill (``alloc`` equals ``full``,
+    the cache's build-time ``max_len`` — positions stay below it, so no
+    sliding window shrank the ring) are sliced to their first ``kv_limit``
+    slots.  While positions stay below ``kv_limit`` the dropped slots are
+    all empty (``slot_pos == -1`` after ``reset_row``), so attention output
+    is unchanged — but each chunk only reads and scores O(live prefix) keys
+    instead of O(alloc).  Windowed leaves (``alloc < full``) may wrap
+    mid-prefill and keep their full ring."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    if not full or kv_limit >= full:
+        return one
+
+    def fix(axis):
+        def f(path, x):
+            name = path[-1].key if isinstance(path[-1], DictKey) else ""
+            if name in _RING_PAYLOAD and x.shape[axis] == full:
+                return x[(slice(None),) * axis + (slice(0, kv_limit),)]
+            return x
+        return f
+
+    out = dict(one)
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix(1), one[key])
+    out["blocks"] = tree_map_with_path(fix(2), one["blocks"])
+    return out
+
+
+def reset_row(pool, slot):
+    """Invalidate batch row ``slot`` for rebinding (slot-at-prefill-start):
+
+    * attention ``slot_pos`` rows become -1, which every attention mask
+      treats as empty — the (large) K/V payload of the previous occupant is
+      NOT rewritten, making a rebind O(alloc) instead of O(alloc * d);
+    * recurrent / shift / conv states and ``pos`` are zeroed (they
+      accumulate, so masking alone cannot neutralize them).
+
+    Jitted with the pool donated this is a handful of small in-place row
+    scatters — the zero-copy replacement for the old full-row bind scatter.
+    (``enc_out`` is per-request encoder output and is left untouched; the
+    real backend serves text-only decoders.)"""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    def fix(axis):
+        def f(path, x):
+            name = path[-1].key if isinstance(path[-1], DictKey) else ""
+            if name in _ATTN_PAYLOAD:
+                return x
+            val = -1 if name == "slot_pos" else 0
+            return x.at[slot].set(val) if axis == 0 else x.at[:, slot].set(val)
+        return f
+
+    out = dict(pool)
+    out["pos"] = pool["pos"].at[slot].set(0)
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix(0), pool[key])
+    out["blocks"] = tree_map_with_path(fix(1), pool["blocks"])
+    return out
+
+
 def copy_into_prefix(new, old, p):
     """Copy the ``p`` batch rows of pool cache ``old`` into the first ``p``
     rows of the (larger) freshly-initialized pool ``new`` (pool doubling).

@@ -709,6 +709,36 @@ def extend(cfg, params, cache, tokens, *, window=None, frontend_emb=None,
     return lm_logits(x_last, params), new_cache
 
 
+def extend_row(cfg, params, pool, tokens, slot, kv_limit=None,
+               full_alloc=None, **kw):
+    """Chunked prefill directly against batch row ``slot`` of a slot-pool
+    cache (DESIGN.md §7): gather the row view, extend it with ``tokens``,
+    scatter back only the ``C`` ring positions the chunk wrote (at offset
+    ``pos[slot]``) plus the small recurrent state.  Jitted with the pool
+    donated, the round trip lowers to in-place row updates — each prompt
+    token's KV is written ONCE into the live pool at the row's current
+    position, with no scratch cache and no full-row bind scatter at prefill
+    completion.
+
+    ``kv_limit`` (static, pow-2) is the caller's bound on the row's live
+    prefix and ``full_alloc`` the pool's build-time ``max_len``: positions
+    stay below the limit for this chunk, so attention runs on a
+    ``kvcache.truncate_rings`` view and scores O(kv_limit) keys instead of
+    O(alloc) — early prompt chunks do a fraction of a full-ring extend's
+    attention work (something the position-oblivious scratch path cannot).
+
+    tokens: (1, C) int32; ``slot`` may be a traced int32.
+    Returns (logits_last (1, V), new_pool).
+    """
+    one = kvcache.read_row(pool, slot)
+    start = one["pos"][0]
+    view = one if kv_limit is None else \
+        kvcache.truncate_rings(one, kv_limit, full_alloc)
+    logits, view = extend(cfg, params, view, tokens, **kw)
+    return logits, kvcache.write_row_slice(pool, view, slot, start,
+                                           tokens.shape[1])
+
+
 def decode_step(cfg, params, cache, tokens, active, **kw):
     """One masked decode iteration over a slot-pool cache (DESIGN.md §3).
 

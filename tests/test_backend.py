@@ -55,16 +55,26 @@ def test_pow2_buckets():
 
 def test_sim_and_real_traces_identical():
     """The backend must not change WHEN things are scheduled: the kernel
-    completion trace of a sim run and a real run of the same trace match."""
+    completion trace of a sim run and a real run of the same trace match —
+    and the trace is also invariant to the prefill execution strategy
+    (in_pool_prefill on/off), since scheduling policy must not depend on
+    how the backend executes."""
     cfg, params, eng_real = _tiny_real_engine()
+    _, _, eng_scratch = _tiny_real_engine(in_pool_prefill=False)
     rng = np.random.default_rng(3)
     reqs = _mk_requests(cfg, rng, [0.0, 0.02, 0.04], [20, 14, 17], 4)
     eng_sim = AgentXPUEngine(cfg)
     m_sim = eng_sim.run_trace(copy.deepcopy(reqs))
     m_real = eng_real.serve(copy.deepcopy(reqs))
+    m_scratch = eng_scratch.serve(copy.deepcopy(reqs))
     assert len(m_sim.completed) == len(m_real.completed) == 3
+    assert len(m_scratch.completed) == 3
     assert eng_sim.last_trace == eng_real.last_trace
-    assert m_sim.sim_time == m_real.sim_time
+    assert eng_real.last_trace == eng_scratch.last_trace
+    assert m_sim.sim_time == m_real.sim_time == m_scratch.sim_time
+    # both prefill strategies are token-exact against each other
+    for r in reqs:
+        assert eng_real.output_tokens(r.id) == eng_scratch.output_tokens(r.id)
 
 
 def test_decode_batch_is_one_device_call():
@@ -195,6 +205,99 @@ def test_slot_reuse_matches_sequential_reference():
     for r in wave3:
         ref = _reference_tokens(cfg, params, r.tokens, 5, 128)
         assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+
+
+def test_scratch_bind_baseline_token_exact():
+    """``in_pool_prefill=False`` (the BENCH_prefill.json baseline) keeps the
+    scratch+bind flow token-exact, with its double KV write visible in the
+    counters; the in-pool default issues ZERO bind scatters."""
+    cfg, params, eng = _tiny_real_engine(in_pool_prefill=False, pool_slots=2)
+    rng = np.random.default_rng(21)
+    # two waves so freed slots are rebound through the bind scatter
+    reqs = _mk_requests(cfg, rng, [0.0, 0.01, 5.0, 5.01], [16, 12, 18, 14], 5)
+    eng.serve(copy.deepcopy(reqs))
+    st = eng.stats()
+    assert st["bind_device_calls"] == len(reqs)
+    assert st["prefill_host_syncs"] == len(reqs)
+    for r in reqs:
+        ref = _reference_tokens(cfg, params, r.tokens, 5, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    # the in-pool default on the same trace: exact, no binds, less KV traffic
+    _, _, eng_pool = _tiny_real_engine(pool_slots=2)
+    eng_pool.serve(copy.deepcopy(reqs))
+    stp = eng_pool.stats()
+    assert stp["bind_device_calls"] == 0
+    assert stp["prefill_host_syncs"] == len(reqs)
+    assert 0 < stp["kv_bytes_prefill"] < st["kv_bytes_prefill"]
+    for r in reqs:
+        assert eng_pool.output_tokens(r.id) == eng.output_tokens(r.id)
+
+
+def test_pool_growth_mid_prefill():
+    """The pool doubles while a prefill is mid-flight (slot allocated at
+    prefill start): the half-written row survives ``copy_into_prefix`` and
+    both requests stay token-exact."""
+    cfg, params, eng = _tiny_real_engine(pool_slots=1)
+    be = eng.backend
+    rng = np.random.default_rng(23)
+    a, b = _mk_requests(cfg, rng, [0.0, 0.0], [24, 20], 3)
+    be.register(a)
+    be.register(b)
+    be.prefill_chunk(a, 0, 16, 0.0)  # A holds the only slot, mid-prefill
+    assert be.pool_slots == 1
+    be.prefill_chunk(b, 0, 20, 0.0)  # B's slot-at-prefill-start forces growth
+    assert be.pool_slots == 2
+    be.prefill_done(b, 0.0)
+    be.prefill_chunk(a, 16, 8, 0.0)  # A finishes on the grown pool
+    be.prefill_done(a, 0.0)
+    for _ in range(2):  # decode both on the pool the prefills wrote in place
+        be.decode_iteration([a, b], 0.0)
+    for r in (a, b):
+        ref = _reference_tokens(cfg, params, r.tokens, 3, 128)
+        assert be.output_tokens(r.id) == ref, f"req {r.id}"
+
+
+def test_release_mid_prefill_returns_slot():
+    """A request released/preempted mid-prefill gives its slot back and the
+    row mask stays clear; the freed slot rebinds cleanly."""
+    cfg, params, eng = _tiny_real_engine(pool_slots=2)
+    be = eng.backend
+    rng = np.random.default_rng(29)
+    a, b = _mk_requests(cfg, rng, [0.0, 0.0], [24, 18], 4)
+    be.register(a)
+    be.prefill_chunk(a, 0, 16, 0.0)  # slot bound at prefill start...
+    assert a.id in be._slot
+    be.release([a], 0.0)  # ...cut off before prefill_done
+    assert a.id not in be._slot
+    assert sorted(be._free) == [0, 1]
+    assert not be._mask_host.any()  # row mask stays clear
+    assert be.output_tokens(a.id) == []
+    # the returned slot is cleanly rebindable end-to-end
+    eng.serve([copy.deepcopy(b)])
+    ref = _reference_tokens(cfg, params, b.tokens, 4, 128)
+    assert eng.output_tokens(b.id) == ref
+    assert eng.stats()["pool_slots"] == 2
+
+
+def test_zero_forward_prefill_returns_slot_in_pool():
+    """A prefill made entirely of zero-length chunks allocated a slot at
+    prefill start but never ran a forward pass: prefill_done must return
+    the slot instead of emitting a token (PR 2 NameError regression shape,
+    in-pool edition)."""
+    cfg, params, eng = _tiny_real_engine(pool_slots=2)
+    be = eng.backend
+    rng = np.random.default_rng(31)
+    (req,) = _mk_requests(cfg, rng, [0.0], [12], 3)
+    be.register(req)
+    be.prefill_chunk(req, 0, 0, 0.0)  # allocates the slot, runs nothing
+    assert req.id in be._slot
+    be.prefill_done(req, 0.0)  # no first token -> slot returned
+    assert req.id not in be._slot and sorted(be._free) == [0, 1]
+    assert be.output_tokens(req.id) == []
+    # the same request id then prefils/decodes exactly afterwards
+    eng.serve([copy.deepcopy(req)])
+    ref = _reference_tokens(cfg, params, req.tokens, 3, 128)
+    assert eng.output_tokens(req.id) == ref
 
 
 def test_pool_grows_under_overload():
