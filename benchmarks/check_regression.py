@@ -1,0 +1,121 @@
+"""Perf-regression CI gate over the committed BENCH_*.json baselines.
+
+Compares freshly produced benchmark artifacts against the copies committed
+in the repo (snapshotted to ``--baseline-dir`` before the benchmarks
+overwrite them) and fails the job when a tracked metric regresses past its
+threshold:
+
+    >15% drop on throughput-style metrics (higher is better)
+    >25% increase on reactive-TTFT-style metrics (lower is better)
+
+Only *within-run ratio* metrics are gated (fused/legacy speedup, in-pool/
+scratch speedup, baseline/abortable TTFT reduction, piggyback throughput
+ratio): both sides of each ratio are measured in the same process on the
+same machine, so the ratios transfer across runner hardware — absolute
+tokens/s measured on a laptop would false-fail on a slower CI runner.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir bench_baseline --fresh-dir .
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (file, dotted metric path, direction, relative threshold, baseline cap)
+#   higher: fail if fresh < min(committed, cap) * (1 - threshold)
+#   lower_inverse (metric is 1/latency): fail if
+#       fresh < min(committed, cap) / (1 + threshold)
+# The cap encodes the metric's ACCEPTANCE floor: a committed value above it
+# (dev-machine headroom on a wall-clock-sensitive metric) does not tighten
+# the gate, so a slower/noisier CI runner that still clears the acceptance
+# level never false-fails — while a PR that actually destroys the property
+# (reactive responsiveness, fusion speedup, piggyback ratio) still reds.
+CHECKS = [
+    ("BENCH_decode.json", "speedup", "higher", 0.15, 2.0),
+    ("BENCH_decode.json", "speedup_vs_per_step", "higher", 0.15, 1.2),
+    ("BENCH_prefill.json", "speedup", "higher", 0.15, 2.0),
+    # reactive TTFT gate: ttft_reduction = baseline_p50 / abortable_p50, so
+    # a >25% reactive-TTFT increase shows as a >25% drop of the reduction.
+    # Cap 10 -> floor 8, double the >=5x acceptance criterion.
+    ("BENCH_reactive.json", "ttft_reduction", "lower_inverse", 0.25, 10.0),
+    ("BENCH_reactive.json", "proactive_throughput_ratio", "higher",
+     0.15, 0.6),
+]
+
+
+def _lookup(doc: dict, path: str):
+    cur = doc
+    for key in path.split("."):
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def compare(baseline_dir: str, fresh_dir: str) -> int:
+    failures, rows = [], []
+    for fname, path, direction, thr, cap in CHECKS:
+        bpath = os.path.join(baseline_dir, fname)
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(bpath):
+            rows.append((fname, path, None, None, "no baseline (skipped)"))
+            continue
+        if not os.path.exists(fpath):
+            failures.append(f"{fname}: fresh artifact missing ({fpath})")
+            continue
+        with open(bpath) as f:
+            base = _lookup(json.load(f), path)
+        with open(fpath) as f:
+            fresh = _lookup(json.load(f), path)
+        if base is None:
+            rows.append((fname, path, None, fresh, "no baseline metric"))
+            continue
+        if fresh is None or not isinstance(fresh, (int, float)):
+            failures.append(f"{fname}:{path}: metric missing in fresh run")
+            continue
+        gate_base = min(base, cap)
+        if direction == "higher":
+            ok = fresh >= gate_base * (1.0 - thr)
+            verdict = f"need >= {gate_base * (1.0 - thr):.3f}"
+        else:  # lower_inverse: metric is 1/latency, so a drop IS the
+            # latency increase the threshold bounds
+            ok = fresh >= gate_base / (1.0 + thr)
+            verdict = f"need >= {gate_base / (1.0 + thr):.3f}"
+        rows.append((fname, path, base, fresh,
+                     "ok" if ok else f"REGRESSION ({verdict})"))
+        if not ok:
+            failures.append(
+                f"{fname}:{path}: {fresh:.3f} vs committed {base:.3f} "
+                f"({verdict})")
+    print(f"{'file':22s} {'metric':28s} {'committed':>10s} "
+          f"{'fresh':>10s}  status")
+    for fname, path, base, fresh, status in rows:
+        bs = f"{base:.3f}" if isinstance(base, (int, float)) else "-"
+        fs = f"{fresh:.3f}" if isinstance(fresh, (int, float)) else "-"
+        print(f"{fname:22s} {path:28s} {bs:>10s} {fs:>10s}  {status}")
+    if failures:
+        print("\nperf-regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nperf-regression gate passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json "
+                         "copies (snapshot them BEFORE running benchmarks "
+                         "— the benchmarks overwrite the repo-root files)")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly produced artifacts")
+    args = ap.parse_args(argv)
+    return compare(args.baseline_dir, args.fresh_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

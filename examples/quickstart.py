@@ -12,7 +12,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_tiny_config
 from repro.core.engine import RealAgentXPUEngine

@@ -32,6 +32,14 @@ def main():
                     help="print every token as it is generated")
     ap.add_argument("--max-fused-steps", type=int, default=32,
                     help="cap on fused decode run length (1 = no fusion)")
+    ap.add_argument("--decode-segment-steps", type=int, default=8,
+                    help="abortable-run segment length")
+    ap.add_argument("--no-abortable-runs", action="store_true",
+                    help="eager fused runs, no plan truncation (PR 2)")
+    ap.add_argument("--inject-mid-stream", action="store_true",
+                    help="submit the reactive request from an on_token "
+                         "callback DURING the run (streaming arrival path) "
+                         "instead of scheduling it in the trace")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch)
@@ -51,15 +59,36 @@ def main():
             tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
     # the user interrupts mid-stream
     plen = 48
-    reqs.append(Request(
+    reactive = Request(
         id=len(reqs), priority=Priority.REACTIVE, prompt_len=plen,
         max_new_tokens=args.out_tokens, arrival_time=0.08,
-        tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+        tokens=rng.integers(0, cfg.vocab_size, (1, plen)))
+    if not args.inject_mid_stream:
+        reqs.append(reactive)
 
     eng = RealAgentXPUEngine(cfg, params, scheduler=args.scheduler,
                              max_len=256,
-                             max_fused_steps=args.max_fused_steps)
-    on_token = stream_printer() if args.stream else None
+                             max_fused_steps=args.max_fused_steps,
+                             abortable_runs=not args.no_abortable_runs,
+                             decode_segment_steps=args.decode_segment_steps)
+    printer = stream_printer() if args.stream else None
+    state = {"tokens": 0, "injected": False}
+    # fire well inside the run even for tiny --out-tokens traces
+    inject_at = min(4 * args.n_proactive,
+                    max(1, args.n_proactive * args.out_tokens // 2))
+
+    def on_token(req, token):
+        state["tokens"] += 1
+        # streaming arrival: the "user" hits enter a few tokens into the
+        # proactive decode stream — submit() lands in the LIVE run and a
+        # committed fused plan is truncated at the next segment boundary
+        if args.inject_mid_stream and not state["injected"] \
+                and state["tokens"] >= inject_at:
+            state["injected"] = True
+            eng.submit(reactive, on_token=on_token)
+        if printer is not None:
+            printer(req, token)
+
     for r in reqs:
         eng.submit(r, on_token=on_token)
     m = eng.run()
@@ -71,7 +100,10 @@ def main():
         print(f"  req {r.id} [{r.priority.name:9s}] ttft={r.ttft*1e3:7.1f}ms "
               f"e2e={r.e2e_latency:6.3f}s preempts={r.preempt_count} "
               f"tokens={toks[:6]}...")
-    print(f"\nreactive TTFT       : {s['reactive_ttft']*1e3:.1f} ms")
+    def ms(v):
+        return f"{v * 1e3:.1f} ms" if v is not None else "n/a"
+    print(f"\nreactive TTFT       : {ms(s['reactive_ttft'])}")
+    print(f"proactive TTFT      : {ms(s['proactive_ttft'])}")
     print(f"proactive mean e2e  : {s['proactive_e2e']:.3f} s")
     print(f"energy              : {s['energy_j_per_token']:.2f} J/token")
     st = eng.stats()
@@ -81,9 +113,17 @@ def main():
           f"{decode_tokens} decode tokens "
           f"(pool of {st['pool_slots']} slots)")
     print(f"fused decode steps  : {st['fused_steps']} "
-          f"in {st['fused_runs']} lax.scan runs")
+          f"in {st['fused_runs']} lax.scan runs "
+          f"({st['decode_segments']} abortable segments)")
+    print(f"aborted fused runs  : {st['aborted_runs']} "
+          f"({st['aborted_steps']} unlaunched steps cancelled on "
+          f"reactive arrival/join)")
+    pig = getattr(eng.last_sched, "piggyback_runs", 0)
+    pig_steps = getattr(eng.last_sched, "piggyback_steps", 0)
+    print(f"piggybacked runs    : {pig} fused runs ({pig_steps} steps) "
+          f"committed under live prefills")
     print(f"host syncs          : {st['host_syncs']} "
-          f"(one per fused run boundary, not per token)")
+          f"(one per fused segment boundary, not per token)")
     print(f"prefill device calls: {st['prefill_device_calls']} "
           f"({st['prefill_host_syncs']} host syncs — one per request)")
     print(f"bind scatters       : {st['bind_device_calls']} "

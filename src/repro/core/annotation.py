@@ -15,7 +15,7 @@ footprint, power).  Two profiles ship:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,6 +25,10 @@ Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
     decode_run(reqs, n_steps)       scheduler guarantees the decode batch is
                                     membership-stable for n_steps iterations
                                     (the event horizon) -> fused execution
+                                    in bounded abortable segments
+    request_preempt(now)            a reactive arrival / prefill join
+                                    truncated the plan -> cancel unlaunched
+                                    segments at a kernel boundary
     decode_iteration(reqs)          one batched decode iteration committed
                                     (replays from the fused block if present)
     finish(req)                     request done -> free its slot
@@ -58,6 +62,14 @@ class ExecutionBackend:
         """Scheduler announcement: the coming ``n_steps`` decode iterations
         will run with exactly this membership (no arrival/completion/finish
         can change the batch before they commit)."""
+        pass
+
+    def request_preempt(self, now: float) -> None:
+        """Scheduler notice that a higher-priority event (reactive arrival,
+        prefill join) truncated the announced run: cancel every decode
+        segment not yet launched.  Already-produced tokens stay buffered —
+        the scheduler still commits them via ``decode_iteration`` (the
+        truncated plan's remaining replay steps)."""
         pass
 
     def decode_iteration(self, reqs: List[Request], now: float) -> None:
@@ -143,7 +155,9 @@ class JaxRealBackend(ExecutionBackend):
 
     def __init__(self, cfg, params, *, pool_slots: int, max_len: int = 512,
                  dtype=None, device_resident: bool = True,
-                 in_pool_prefill: Optional[bool] = None):
+                 in_pool_prefill: Optional[bool] = None,
+                 abortable_runs: bool = True,
+                 decode_segment_steps: int = 8):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -167,6 +181,17 @@ class JaxRealBackend(ExecutionBackend):
         # and the legacy baseline predates in-pool prefill anyway.
         self.in_pool_prefill = device_resident if in_pool_prefill is None \
             else in_pool_prefill
+        # abortable_runs=False restores PR 2's eager fused execution (the
+        # whole announced run launches as one blocking device program chain
+        # at announce time) — the measurable baseline of BENCH_reactive.json.
+        # Abortable mode executes the run LAZILY in bounded segments of
+        # ``decode_segment_steps`` iterations: one segment launches at
+        # announce, the next only when the replay buffer drains, so between
+        # any two segments the host is back in the scheduler loop and a
+        # ``request_preempt`` can cancel everything not yet launched at a
+        # kernel boundary (DESIGN.md §8).
+        self.abortable_runs = abortable_runs
+        self.decode_segment_steps = max(int(decode_segment_steps), 1)
         self.max_len = max_len
         self.dtype = dtype or jnp.float32
         self.pool_slots = max(int(pool_slots), 1)
@@ -202,9 +227,12 @@ class JaxRealBackend(ExecutionBackend):
         self._toks = jnp.zeros((self.pool_slots,), jnp.int32)
         self._mask = jnp.zeros((self.pool_slots,), bool)
         self._mask_host = np.zeros((self.pool_slots,), bool)  # mirror
-        # fused-run replay buffer: host token block + committed membership
+        # fused-run replay buffer: host token block + committed membership.
+        # _fused_left counts announced iterations NOT yet executed on device
+        # (abortable mode launches them segment-by-segment on demand).
         self._fused_rows: Deque = deque()
         self._fused_slots: Optional[frozenset] = None
+        self._fused_left = 0
         self._jit_cache: Dict[tuple, object] = {}
         # counters (reported by examples/ and asserted by tests/test_backend)
         self.jit_compilations = 0
@@ -213,6 +241,9 @@ class JaxRealBackend(ExecutionBackend):
         self.host_syncs = 0  # device->host token fetches
         self.fused_steps = 0  # decode iterations served from fused runs
         self.fused_runs = 0
+        self.decode_segments = 0  # lax.scan segments launched (>= runs)
+        self.aborted_runs = 0  # runs truncated by request_preempt
+        self.aborted_steps = 0  # announced iterations cancelled unlaunched
         self.prefill_host_syncs = 0  # first-token fetches (1 per prefill)
         self.bind_device_calls = 0  # full-row bind scatters (0 in-pool)
         self.kv_bytes_prefill = 0  # prompt-phase KV bytes written
@@ -551,32 +582,66 @@ class JaxRealBackend(ExecutionBackend):
     # -- decode ---------------------------------------------------------------
     def decode_run(self, reqs: List[Request], n_steps: int,
                    now: float) -> None:
-        """Execute the whole membership-stable run now; buffer the token
-        block for per-iteration replay (one host sync per run)."""
+        """Commit to a membership-stable run.  Abortable mode (default)
+        launches only the first ``decode_segment_steps``-iteration segment
+        now and the rest lazily as the replay buffer drains, so a reactive
+        arrival between segments cancels the unlaunched remainder
+        (``request_preempt``) at a kernel boundary.  ``abortable_runs=False``
+        executes the whole plan eagerly (one blocking launch chain, one host
+        sync) — PR 2's behaviour, kept as the BENCH_reactive baseline."""
         live = [r for r in reqs if r.id in self._slot]
         if not live or n_steps <= 1 or not self.device_resident:
             return
         slots = [self._slot[r.id] for r in live]
         self._sync_mask(slots)
+        self._fused_rows = deque()
+        self._fused_slots = frozenset(slots)
+        self._fused_left = int(n_steps)
+        self.fused_runs += 1
+        self._run_segment()
+
+    def _run_segment(self) -> None:
+        """Launch the next bounded ``lax.scan`` segment of the committed run
+        and fetch its token block (ONE host sync per segment)."""
+        n = min(self._fused_left, self.decode_segment_steps) \
+            if self.abortable_runs else self._fused_left
+        if n <= 0:
+            return
         blocks = []
-        for n in _pow2_buckets(int(n_steps)):
-            fn = self._decode_run_fn(self.pool_slots, n)
+        for b in _pow2_buckets(n):
+            fn = self._decode_run_fn(self.pool_slots, b)
             block, self._toks, self._pool = fn(self.params, self._pool,
                                                self._toks, self._mask)
             self.decode_device_calls += 1
             blocks.append(block)
-        full = self._np.asarray(self._jnp.concatenate(blocks, axis=0))
+        full = self._np.asarray(self._jnp.concatenate(blocks, axis=0)
+                                if len(blocks) > 1 else blocks[0])
         self.host_syncs += 1
-        self._fused_rows = deque(full)
-        self._fused_slots = frozenset(slots)
-        self.fused_runs += 1
-        self.fused_steps += int(n_steps)
+        self._fused_rows.extend(full)
+        self._fused_left -= n
+        self.fused_steps += n
+        self.decode_segments += 1
+
+    def request_preempt(self, now: float) -> None:
+        """Cancel every decode segment of the committed run that has not
+        launched yet.  Buffered (already-executed) rows stay: the scheduler
+        replays them so the event-horizon commitment of the truncated plan
+        still holds token-exactly."""
+        if self._fused_left > 0:
+            self.aborted_runs += 1
+            self.aborted_steps += self._fused_left
+            self._fused_left = 0
+            if not self._fused_rows:
+                self._fused_slots = None
 
     def decode_iteration(self, reqs: List[Request], now: float) -> None:
         live = [r for r in reqs if r.id in self._slot]
         if not live:
             return
-        if self._fused_rows:
+        if self._fused_rows or (self._fused_slots is not None
+                                and self._fused_left > 0):
+            if not self._fused_rows:
+                self._run_segment()  # lazy: next segment only when needed
             self._replay_row(live)
             return
         slots = [self._slot[r.id] for r in live]
@@ -612,8 +677,8 @@ class JaxRealBackend(ExecutionBackend):
                 f"{sorted(slots)}) — the scheduler's event horizon must be "
                 "a guaranteed lower bound")
         row = self._fused_rows.popleft()
-        if not self._fused_rows:
-            self._fused_slots = None
+        if not self._fused_rows and self._fused_left <= 0:
+            self._fused_slots = None  # plan fully executed AND replayed
         self._commit(live, row)
 
     def _commit(self, live: List[Request], tokens_by_slot):
@@ -629,9 +694,10 @@ class JaxRealBackend(ExecutionBackend):
         if slot is not None:
             if self._fused_slots is not None and slot in self._fused_slots:
                 # a planned member vanished mid-run (release cut-off): the
-                # remaining buffered rows are stale
+                # remaining buffered rows and unlaunched segments are stale
                 self._fused_rows.clear()
                 self._fused_slots = None
+                self._fused_left = 0
             # clear the slot's last-token / mask state so a stale token can
             # never leak into a future bind's first masked step
             fn = self._clear_fn(self.pool_slots)
@@ -656,6 +722,7 @@ class JaxRealBackend(ExecutionBackend):
             self.finish(r, now)
         self._fused_rows.clear()  # uncommitted fused tokens are dropped
         self._fused_slots = None
+        self._fused_left = 0
 
     # -- output ----------------------------------------------------------------
     def _emit(self, req: Request, token: int):
@@ -673,6 +740,9 @@ class JaxRealBackend(ExecutionBackend):
                 "host_syncs": self.host_syncs,
                 "fused_steps": self.fused_steps,
                 "fused_runs": self.fused_runs,
+                "decode_segments": self.decode_segments,
+                "aborted_runs": self.aborted_runs,
+                "aborted_steps": self.aborted_steps,
                 "prefill_host_syncs": self.prefill_host_syncs,
                 "bind_device_calls": self.bind_device_calls,
                 "kv_bytes_prefill": self.kv_bytes_prefill,

@@ -56,12 +56,22 @@ class AgentXPUEngine:
         self.scheduler_name = scheduler
         self.sched_kw = sched_kw
         self.last_trace: List[tuple] = []  # kernel-completion trace
+        self.last_sched: Optional[SchedulerBase] = None
+        self._sim: Optional[Simulator] = None  # live event loop, if any
+        self._arrival_poll = None
 
     def _run(self, requests: List[Request], max_time: float) -> SimMetrics:
         sched = make_scheduler(self.scheduler_name, self.heg,
                                backend=self.backend, **self.sched_kw)
-        metrics = Simulator(sched, requests, max_time=max_time).run()
+        sim = Simulator(sched, requests, max_time=max_time,
+                        poll=self._arrival_poll)
+        self._sim = sim
+        try:
+            metrics = sim.run()
+        finally:
+            self._sim = None
         self.last_trace = sched.trace
+        self.last_sched = sched
         return metrics
 
     def run_trace(self, requests: List[Request],
@@ -88,34 +98,79 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  scheduler: str = "agent.xpu", max_len: int = 512,
                  dtype=None, pool_slots: Optional[int] = None,
                  max_fused_steps: int = 32, device_resident: bool = True,
-                 in_pool_prefill: Optional[bool] = None, **sched_kw):
+                 in_pool_prefill: Optional[bool] = None,
+                 abortable_runs: bool = True, decode_segment_steps: int = 8,
+                 **sched_kw):
+        # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
+        # the scheduler's plan-truncation arithmetic must mirror the
+        # backend's lazy segment launches (DESIGN.md §8)
         super().__init__(cfg, hw, scheduler,
-                         max_fused_steps=max_fused_steps, **sched_kw)
+                         max_fused_steps=max_fused_steps,
+                         abortable_runs=abortable_runs,
+                         decode_segment_steps=decode_segment_steps,
+                         **sched_kw)
         from repro.core.backend import JaxRealBackend
         self.backend = JaxRealBackend(
             cfg, params, pool_slots=pool_slots or self.heg.B_max,
             max_len=max_len, dtype=dtype, device_resident=device_resident,
-            in_pool_prefill=in_pool_prefill)
+            in_pool_prefill=in_pool_prefill, abortable_runs=abortable_runs,
+            decode_segment_steps=decode_segment_steps)
         self._pending: List[Request] = []
+        self._live: List[Request] = []  # everything owned by the active run
 
     # -- streaming flow API ---------------------------------------------------
     def submit(self, req: Request,
                on_token: Optional[TokenCallback] = None) -> Request:
         """Enqueue a request; ``on_token(req, token)`` fires per generated
         token (first token at prefill completion, then one per decode
-        iteration) during the next :meth:`run`."""
+        iteration).  Callable mid-run — from an ``on_token`` callback or an
+        arrival source — in which case the request is injected into the live
+        event loop at the current sim instant (its arrival is processed
+        before any later event, and a committed fused decode run is
+        truncated at the next segment boundary if the request is
+        reactive)."""
         self.backend.register(req, on_token)
-        self._pending.append(req)
+        if self._sim is not None:
+            req.arrival_time = max(req.arrival_time, self._sim.now)
+            self._live.append(req)
+            self._sim.inject(req)
+        else:
+            self._pending.append(req)
         return req
 
+    def set_arrival_source(self, source) -> None:
+        """Install a streaming arrival source: ``source(sim_now)`` is polled
+        once per event-loop turn and returns an iterable of ``Request`` (or
+        ``(Request, on_token)`` pairs) to submit at that instant.  This is
+        the single-threaded stand-in for an external arrival queue: with
+        abortable fused runs the poll runs between decode *segments*, so a
+        wall-clock arrival is noticed within one segment instead of one
+        full fused run (``benchmarks … reactive_latency``).  The source is
+        polled one final time as the event loop drains; anything it would
+        only release *after* the run ends is not served — callers holding
+        deadline-based sources should keep deadlines inside the expected
+        run wall time (or submit the stragglers to the next ``run``)."""
+        if source is None:
+            self._arrival_poll = None
+            return
+
+        def _poll(now: float):
+            for item in source(now) or ():
+                req, cb = item if isinstance(item, tuple) else (item, None)
+                self.submit(req, cb)
+        self._arrival_poll = _poll
+
     def run(self, max_time: float = 36_000.0) -> SimMetrics:
-        """Serve everything submitted since the last run."""
+        """Serve everything submitted since the last run (plus anything
+        submitted *during* the run via streaming arrivals)."""
         reqs, self._pending = self._pending, []
+        self._live = list(reqs)
         metrics = self._run(reqs, max_time)
         done = {r.id for r in metrics.completed}
         # requests cut off by max_time must not hold slots/scratch forever
-        self.backend.release([r for r in reqs if r.id not in done],
+        self.backend.release([r for r in self._live if r.id not in done],
                              metrics.sim_time)
+        self._live = []
         return metrics
 
     def serve(self, requests: List[Request],

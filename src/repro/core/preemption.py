@@ -13,8 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.heg import HEG, HEGNode, KernelKind
-from repro.core.requests import Request, ReqState
+from repro.core.heg import HEG, HEGNode
+from repro.core.requests import Request
 
 
 @dataclasses.dataclass

@@ -14,7 +14,7 @@ import dataclasses
 import enum
 import itertools
 import math
-from typing import Iterator, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

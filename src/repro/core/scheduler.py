@@ -16,7 +16,6 @@ decode iteration (the iGPU dynamic kernel).
 from __future__ import annotations
 
 import dataclasses
-import enum
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -52,7 +51,8 @@ class SchedulerBase:
 
     def __init__(self, heg: HEG, *, b_max: Optional[int] = None,
                  backend: Optional[ExecutionBackend] = None,
-                 max_fused_steps: int = 32):
+                 max_fused_steps: int = 32, abortable_runs: bool = True,
+                 decode_segment_steps: int = 8):
         self.heg = heg
         self.hw = heg.hw
         self.rt_queue: deque = deque()  # reactive req ids
@@ -72,7 +72,17 @@ class SchedulerBase:
         # device in one shot.  max_fused_steps bounds how long a newly
         # decode-ready request can wait to join the batch (1 = no fusion).
         self.max_fused_steps = max(int(max_fused_steps), 1)
-        self._fused_plan: Optional[dict] = None  # {"order": tuple, "left": n}
+        # abortable runs (DESIGN.md §8): the backend executes fused plans in
+        # ``decode_segment_steps``-iteration segments, so a plan can be
+        # truncated at the next segment boundary (``_abort_fused_plan``)
+        # when a reactive arrives or a prefill completes mid-plan.  Both
+        # values MUST match the real backend's — the truncation arithmetic
+        # below mirrors its lazy segment launches, which keeps sim and real
+        # traces identical by construction.
+        self.abortable_runs = abortable_runs
+        self.decode_segment_steps = max(int(decode_segment_steps), 1)
+        # {"order": tuple, "left": n, "total": n_announced}
+        self._fused_plan: Optional[dict] = None
 
     # -- request lifecycle ---------------------------------------------------
     def on_arrival(self, req: Request, now: float):
@@ -187,8 +197,8 @@ class SchedulerBase:
                 c.req.state = ReqState.PREFILL
         return rk
 
-    # -- fused decode runs (DESIGN.md §6) ------------------------------------
-    def _decode_horizon(self, rids: List[int]) -> int:
+    # -- fused decode runs (DESIGN.md §6, §8) --------------------------------
+    def _decode_horizon(self, rids: List[int], t_iter: float) -> int:
         """Event horizon: a GUARANTEED lower bound on how many consecutive
         decode iterations run with exactly this membership.  Membership only
         changes through a prefill completion (new request joins), a batch
@@ -197,7 +207,11 @@ class SchedulerBase:
         request is already in the batch, and then bounded by the first
         member to finish.  Future *arrivals* are handled by commitment: the
         plan pins membership until it drains (their prefill still overlaps;
-        only their decode join waits, at most ``max_fused_steps``)."""
+        only their decode join waits, at most ``max_fused_steps``).
+
+        ``t_iter`` (the batch's standalone per-iteration time) lets policy
+        subclasses size slack-aware piggyback runs; the base policy ignores
+        it."""
         if not rids:
             return 1
         if set(self.ctx) - set(rids):
@@ -209,12 +223,37 @@ class SchedulerBase:
     def _maybe_fuse(self, rk: RunningKernel, now: float):
         if self._fused_plan is not None:
             return
-        n = self._decode_horizon(rk.req_ids)
+        n = self._decode_horizon(rk.req_ids, rk.t_standalone)
         if n > 1:
-            self._fused_plan = {"order": tuple(rk.req_ids), "left": n}
+            self._fused_plan = {"order": tuple(rk.req_ids), "left": n,
+                                "total": n}
             self.backend.decode_run(
                 [self.ctx[r].req for r in rk.req_ids if r in self.ctx],
                 n, now)
+
+    def _abort_fused_plan(self, now: float):
+        """Truncate the committed fused plan at the next segment boundary
+        (DESIGN.md §8).  The backend has already launched
+        ``seg * ceil(max(committed, 1) / seg)`` iterations — one segment at
+        announce, then one more each time the replay buffer drained — so
+        those must still commit (token block replay), but everything beyond
+        them is cancelled via ``backend.request_preempt`` and the scheduler
+        re-plans as soon as the executed prefix drains.  Deterministic in
+        scheduler state only, hence identical under Sim and Jax backends."""
+        plan = self._fused_plan
+        if plan is None or not self.abortable_runs:
+            return
+        seg = self.decode_segment_steps
+        committed = plan["total"] - plan["left"]
+        executed = min(plan["total"], seg * max(1, -(-committed // seg)))
+        new_left = executed - committed
+        if new_left >= plan["left"]:
+            return  # nothing left to cancel (plan already fully launched)
+        plan["left"] = new_left
+        plan["total"] = executed
+        self.backend.request_preempt(now)
+        if plan["left"] <= 0:
+            self._fused_plan = None
 
     def _reactive_active(self) -> Optional[ReqContext]:
         for rid in self.rt_queue:
@@ -244,9 +283,12 @@ class AgentXpuScheduler(SchedulerBase):
                  tau_high: float = 0.7, starvation_threshold: float = 30.0,
                  reactive_offload: bool = True,
                  backend: Optional[ExecutionBackend] = None,
-                 max_fused_steps: int = 32):
+                 max_fused_steps: int = 32, abortable_runs: bool = True,
+                 decode_segment_steps: int = 8):
         super().__init__(heg, b_max=b_max, backend=backend,
-                         max_fused_steps=max_fused_steps)
+                         max_fused_steps=max_fused_steps,
+                         abortable_runs=abortable_runs,
+                         decode_segment_steps=decode_segment_steps)
         self.enable_backfill = enable_backfill
         self.enable_contention = enable_contention
         self.tau_low = tau_low
@@ -254,6 +296,8 @@ class AgentXpuScheduler(SchedulerBase):
         self.starvation_threshold = starvation_threshold
         self.reactive_offload = reactive_offload
         self._bf_used = 0.0  # micro-backfill budget since last decode
+        self.piggyback_runs = 0  # fused runs committed under live prefills
+        self.piggyback_steps = 0
 
     # -- Algorithm 1: memory-aware dispatch gate -----------------------------
     def _gate(self, cand: RunningKernel, now: float, reactive: bool) -> bool:
@@ -436,15 +480,61 @@ class AgentXpuScheduler(SchedulerBase):
                  - self.ctx[r].req.decoded)
         return (rts + bes)[:self.b_max]
 
+    # -- slack-aware piggybacking (DESIGN.md §8) ------------------------------
+    def _decode_horizon(self, rids: List[int], t_iter: float) -> int:
+        """Extends the base horizon: when every non-member is still in
+        prefill, proactive decode steps PIGGYBACK into the prefill gap as a
+        bounded fused run instead of dropping to one device call per token.
+        The run is sized by the same slack model ``_duration_ok`` leans on —
+        the nearest joiner's estimated time to prefill completion (ETC)
+        divided by the batch's per-iteration time — rounded down to whole
+        abort segments, so the plan ends at a kernel boundary before the
+        join is even expected; if the prefill finishes early anyway,
+        ``_finish_prefill`` truncates the plan at the next boundary.  Only
+        meaningful with ``abortable_runs`` (commitment without abort would
+        re-create the head-of-line blocking this exists to remove)."""
+        if not rids:
+            return 1
+        others = set(self.ctx) - set(rids)
+        steps = min(self.ctx[r].req.max_new_tokens - self.ctx[r].req.decoded
+                    for r in rids)
+        if others:
+            if not self.abortable_runs or any(
+                    self.ctx[o].prefill_done for o in others):
+                # a decode-ready request is waiting to join: no commitment
+                return 1
+            slack = min(self.ctx[o].etc() for o in others)
+            seg = self.decode_segment_steps
+            n = min(steps, int(slack / max(t_iter, 1e-9)))
+            steps = (n // seg) * seg  # whole segments only; 0 -> no fusion
+            steps = min(steps, self.max_fused_steps)
+            if steps > 1:
+                self.piggyback_runs += 1  # _maybe_fuse announces iff > 1
+                self.piggyback_steps += steps
+        return max(1, min(steps, self.max_fused_steps))
+
+    def _finish_prefill(self, req: Request, now: float):
+        super()._finish_prefill(req, now)
+        # a joiner became decode-ready mid-plan (piggybacked run, or an
+        # arrival that prefilled under a proactive-only plan): cut the plan
+        # at the next segment boundary so the join waits O(segment), not
+        # O(max_fused_steps)
+        self._abort_fused_plan(now)
+
     # -- preemption (kernel boundary; §6.2) -----------------------------------
     def on_arrival(self, req: Request, now: float):
         super().on_arrival(req, now)
         if req.priority == Priority.REACTIVE:
             # mark running best-effort prefill as preempted; their current
             # kernel completes (no mid-kernel abort), context checkpointed
-            for rid, c in self.ctx.items():
+            for c in self.ctx.values():
                 if c.req.priority == Priority.PROACTIVE \
                         and c.req.state == ReqState.PREFILL:
                     c.req.state = ReqState.PREEMPTED
                     c.req.preempt_count += 1
                     c.preempted_at = now
+            # abortable fused decode (DESIGN.md §8): cancel the unlaunched
+            # segments of any committed proactive run so the reactive's
+            # prefill/decode reach the device within one segment instead of
+            # waiting out up to max_fused_steps iterations
+            self._abort_fused_plan(now)

@@ -16,7 +16,7 @@ from typing import Dict, List, Optional
 
 from repro.core.contention import co_execution_rates
 from repro.core.requests import Priority, Request
-from repro.core.scheduler import RunningKernel, SchedulerBase
+from repro.core.scheduler import SchedulerBase
 
 
 @dataclasses.dataclass
@@ -61,10 +61,15 @@ class SimMetrics:
 
 class Simulator:
     def __init__(self, scheduler: SchedulerBase, requests: List[Request],
-                 *, max_time: float = 36_000.0):
+                 *, max_time: float = 36_000.0,
+                 poll: Optional[callable] = None):
         self.sched = scheduler
         self.requests = sorted(requests, key=lambda r: r.arrival_time)
         self.max_time = max_time
+        # streaming-arrival hook: called once per event-loop turn with the
+        # current sim time; may call ``inject`` to add requests mid-run
+        # (``RealAgentXPUEngine.submit`` during an active run routes here)
+        self.poll = poll
         self.now = 0.0
         self.energy = 0.0
         self.lane_busy: Dict[str, float] = {ln: 0.0
@@ -76,6 +81,14 @@ class Simulator:
     # -- event plumbing -------------------------------------------------------
     def _push(self, t: float, kind: str, payload):
         heapq.heappush(self._heap, (t, next(self._counter), kind, payload))
+
+    def inject(self, req: Request):
+        """Streaming arrival: enqueue a request while the event loop is
+        live.  Safe to call from ``poll``, ``on_token`` callbacks, or any
+        scheduler/backend hook — the arrival event lands at the current sim
+        instant (or the request's future ``arrival_time``) and is processed
+        before any later event."""
+        self._push(max(req.arrival_time, self.now), "arrival", req)
 
     def _rates(self) -> Dict[str, float]:
         lanes = [ln for ln in self.sched.lanes
@@ -121,7 +134,11 @@ class Simulator:
     def run(self) -> SimMetrics:
         for req in self.requests:
             self._push(req.arrival_time, "arrival", req)
-        while self._heap and self.now < self.max_time:
+        while self.now < self.max_time:
+            if self.poll is not None:
+                self.poll(self.now)  # may inject() new arrivals
+            if not self._heap:
+                break
             t, _, kind, payload = heapq.heappop(self._heap)
             if kind == "done":
                 ln, epoch = payload

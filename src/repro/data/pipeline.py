@@ -9,7 +9,7 @@ packing are deterministic given the seed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

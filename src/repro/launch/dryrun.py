@@ -20,7 +20,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch.mesh import make_production_mesh

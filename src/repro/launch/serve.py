@@ -41,6 +41,14 @@ def main(argv=None):
     ap.add_argument("--max-fused-steps", type=int, default=32,
                     help="with --real: cap on fused decode run length "
                          "(1 disables fusion — per-iteration device calls)")
+    ap.add_argument("--decode-segment-steps", type=int, default=8,
+                    help="abortable-run segment length: fused runs execute "
+                         "lazily in segments this long, so a reactive "
+                         "arrival is noticed within one segment")
+    ap.add_argument("--no-abortable-runs", action="store_true",
+                    help="execute announced fused runs eagerly and never "
+                         "truncate plans (PR 2 semantics; the "
+                         "BENCH_reactive.json baseline)")
     ap.add_argument("--pool-slots", type=int, default=None,
                     help="with --real: KV slot-pool size (default: the "
                          "HEG batching knee B_max; doubles on demand)")
@@ -78,6 +86,8 @@ def main(argv=None):
             cfg, params, scheduler=args.scheduler, max_len=256,
             pool_slots=args.pool_slots,
             max_fused_steps=args.max_fused_steps,
+            abortable_runs=not args.no_abortable_runs,
+            decode_segment_steps=args.decode_segment_steps,
             device_resident=not args.no_device_resident,
             # None follows device_resident (in-pool prefill leans on
             # donation; --no-device-resident restores the full legacy flow)
@@ -93,8 +103,11 @@ def main(argv=None):
                   f"{st['decode_device_calls']} decode device calls, "
                   f"{st['host_syncs']} host syncs, "
                   f"{st['fused_steps']} fused decode steps "
-                  f"in {st['fused_runs']} runs, "
+                  f"in {st['fused_runs']} runs "
+                  f"({st['decode_segments']} segments), "
                   f"{st['pool_slots']} pool slots")
+            print(f"[real] preemption: {st['aborted_runs']} runs truncated "
+                  f"({st['aborted_steps']} unlaunched steps cancelled)")
             print(f"[real] prefill: {st['prefill_device_calls']} device "
                   f"calls, {st['prefill_host_syncs']} host syncs, "
                   f"{st['bind_device_calls']} bind scatters, "
@@ -102,7 +115,9 @@ def main(argv=None):
     else:
         cfg = get_config(args.arch)
         eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],
-                             scheduler=args.scheduler)
+                             scheduler=args.scheduler,
+                             abortable_runs=not args.no_abortable_runs,
+                             decode_segment_steps=args.decode_segment_steps)
         metrics = eng.run_trace(reqs)
 
     s = metrics.summary()

@@ -14,13 +14,12 @@ patch embeddings of the right shape (the one sanctioned carve-out).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import forward, init_cache, init_params, extend
+from repro.models import init_cache, init_params, extend
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_loop import make_train_step
 

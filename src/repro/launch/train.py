@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_tiny_config
 from repro.data.pipeline import PipelineConfig, batches

@@ -11,7 +11,6 @@ form which under/overflows for strong decays.  States are carried in f32.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

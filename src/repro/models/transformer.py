@@ -525,7 +525,6 @@ def _run_trunk(cfg, params, x, cache, ctx, *, remat):
     """Head layers -> scanned pattern groups -> tail layers."""
     head, pattern, repeats, tail = layout(cfg)
     aux_total = jnp.zeros((), jnp.float32)
-    mode = ctx["mode"]
     with_cache = cache is not None
 
     def one(kind, lp, x, st):
@@ -586,8 +585,6 @@ def encode(cfg, params, frontend_emb):
     x = frontend_emb
     if "frontend_proj" in params:
         x = jnp.einsum("bfe,ed->bfd", x, params["frontend_proj"]["w"])
-    ctx = _default_ctx(cfg, "train", positions=jnp.arange(x.shape[1]),
-                       window=None)
 
     def body(x, lp):
         h = rms_norm(x, lp["norm1"]["w"], cfg.norm_eps)

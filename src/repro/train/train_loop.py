@@ -2,15 +2,14 @@
 dry-run), and a simple host-driven loop for the runnable examples."""
 from __future__ import annotations
 
-import functools
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import forward
-from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+from repro.train.optimizer import (AdamWConfig, adamw_update,
                                    init_opt_state)
 
 

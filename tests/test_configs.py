@@ -1,7 +1,7 @@
 """Config registry: published parameter counts, tiny-variant constraints."""
 import pytest
 
-from repro.configs import ARCHS, ASSIGNED, get_config, get_tiny_config
+from repro.configs import ASSIGNED, get_config, get_tiny_config
 
 EXPECTED_PARAMS_B = {  # published totals (tolerance: layer-norm/bias noise)
     "rwkv6-1.6b": (1.6, 2.2),

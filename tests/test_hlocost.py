@@ -1,7 +1,6 @@
 """HLO cost model: trip-count expansion, dot flops, in-place update bytes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlocost import hlo_cost, parse_module
 

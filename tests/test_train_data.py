@@ -1,5 +1,4 @@
 """Training substrate: pipeline determinism, loss descent, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp
