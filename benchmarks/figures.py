@@ -268,12 +268,24 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
       legacy    pre-donation baseline (``device_resident=False``): no buffer
                 donation, per-iteration host rebuild + upload, per-token sync
       per_step  donation + on-device batch state, fusion off
-      fused     full hot path (scheduler-announced ``lax.scan`` runs)
+      fused     full hot path (scheduler-announced ``lax.scan`` runs,
+                elastic decode dispatch on)
 
     Every mode is run once to compile, then timed on repeated serves of the
     same shapes (best-of-reps).  Derived: fused / legacy tokens-per-sec
     speedup.  Env knobs (CI smoke mode): BENCH_DECODE_REQS,
     BENCH_DECODE_TOKENS, BENCH_DECODE_REPS.
+
+    A second section is the DECODE-SCALING SWEEP (DESIGN.md §9): prompt
+    length x pool occupancy, elastic vs full-pool dispatch on the identical
+    trace.  Elastic dispatch bounds each decode program to the leading
+    pow-2 live rows and the pow-2 live-prefix ``kv_limit``, so a half-empty
+    pool with short prompts stops paying for dead rows and dead ring slots
+    — ``sweep.elastic_speedup`` (the JSON's top-level ``elastic_speedup``)
+    is the tokens/s ratio at the lowest-occupancy shortest-prompt cell
+    (acceptance >= 1.5x) and is gated by benchmarks/check_regression.py.
+    Env knobs: BENCH_DECODE_SWEEP_POOL, BENCH_DECODE_SWEEP_TOKENS,
+    BENCH_DECODE_SWEEP_REPS.
     """
     import jax
     import jax.numpy as jnp
@@ -341,11 +353,86 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
     fused["mode"] = "fused"
     speedup = fused["tokens_per_s"] / max(legacy["tokens_per_s"], 1e-9)
     rows = [legacy, per_step, fused]
+
+    # -- decode-scaling sweep: prompt length x pool occupancy ----------------
+    pool = int(os.environ.get("BENCH_DECODE_SWEEP_POOL", "16"))
+    sweep_tokens = int(os.environ.get("BENCH_DECODE_SWEEP_TOKENS", "32"))
+    sweep_reps = int(os.environ.get("BENCH_DECODE_SWEEP_REPS", "3"))
+    # every occupancy clamped to >= 1: a 0-request cell would measure
+    # nothing and write a fake 0.0 into the GATED elastic_speedup metric
+    occs = sorted({max(1, pool // 4), max(1, pool // 2), pool})
+    plens_sweep = (16, 64)
+
+    def mk_sweep(base_id, occ, sweep_plen):
+        rng = np.random.default_rng(0)
+        return [Request(
+            id=base_id + i, priority=Priority.PROACTIVE,
+            prompt_len=sweep_plen, max_new_tokens=sweep_tokens,
+            arrival_time=0.0,
+            tokens=rng.integers(0, cfg.vocab_size, (1, sweep_plen)))
+            for i in range(occ)]
+
+    def run_cell(occ, sweep_plen, elastic):
+        # b_max=pool so full occupancy still forms ONE fused batch; pool
+        # size is held constant across cells — occupancy, not allocation,
+        # is the swept variable
+        eng = RealAgentXPUEngine(cfg, params, max_len=128, pool_slots=pool,
+                                 b_max=pool, max_fused_steps=32,
+                                 elastic_decode=elastic)
+        eng.serve(mk_sweep(0, occ, sweep_plen))  # warm-up: compile shapes
+        best = None
+        for rep in range(sweep_reps):
+            s0 = dict(eng.stats())
+            t0 = time.perf_counter()
+            m = eng.serve(mk_sweep(1000 * (rep + 1), occ, sweep_plen))
+            wall = time.perf_counter() - t0
+            s1 = eng.stats()
+            decode_tokens = sum(r.decoded - 1 for r in m.completed)
+            row = {
+                "tokens_per_s": decode_tokens / max(wall, 1e-9),
+                "kv_bytes_decode":
+                    s1["kv_bytes_decode"] - s0["kv_bytes_decode"],
+                "decode_rows": s1["decode_rows"],
+                "decode_kv_limit": s1["decode_kv_limit"],
+            }
+            if best is None or row["tokens_per_s"] > best["tokens_per_s"]:
+                best = row
+        return best
+
+    sweep_rows = []
+    for sweep_plen in plens_sweep:
+        for occ in occs:
+            el = run_cell(occ, sweep_plen, True)
+            fp = run_cell(occ, sweep_plen, False)
+            sweep_rows.append({
+                "pool_slots": pool, "live": occ, "prompt_len": sweep_plen,
+                "elastic_tokens_per_s": el["tokens_per_s"],
+                "full_tokens_per_s": fp["tokens_per_s"],
+                "ratio": el["tokens_per_s"] / max(fp["tokens_per_s"], 1e-9),
+                "decode_rows": el["decode_rows"],
+                "decode_kv_limit": el["decode_kv_limit"],
+                "kv_bytes_ratio": el["kv_bytes_decode"]
+                / max(fp["kv_bytes_decode"], 1),
+            })
+    by_cell = {(r["live"], r["prompt_len"]): r for r in sweep_rows}
+    elastic_speedup = by_cell[(occs[0], plens_sweep[0])]["ratio"]
+    elastic_at_full = by_cell[(pool, plens_sweep[-1])]["ratio"]
+    rows = rows + sweep_rows
+
     out = {"n_requests": n_req, "out_tokens": out_tokens,
            "legacy": legacy, "per_step": per_step, "fused": fused,
            "speedup": speedup,
            "speedup_vs_per_step": fused["tokens_per_s"]
-           / max(per_step["tokens_per_s"], 1e-9)}
+           / max(per_step["tokens_per_s"], 1e-9),
+           # elastic decode dispatch (DESIGN.md §9): low-occupancy
+           # short-prompt elastic/full-pool tokens/s (gated, floor 1.5x)
+           # and the full-occupancy sanity ratio — must never drop below
+           # ~1x (the elastic program degenerates to the full-pool one at
+           # steady state, and still wins the tail as finishers drain)
+           "elastic_speedup": elastic_speedup,
+           "elastic_speedup_at_full_occupancy": elastic_at_full,
+           "sweep": {"pool_slots": pool, "out_tokens": sweep_tokens,
+                     "rows": sweep_rows}}
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -368,6 +455,12 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
                  truncates the plan at the next kernel boundary
                  (``request_preempt``) and piggybacked proactive segments
                  keep decoding through the reactive's prefill slack
+
+    Both modes run with ``elastic_decode=False``: the comparison isolates
+    abortable-vs-eager execution, and elastic dispatch would add (rows,
+    kv_limit) jit keys whose injection-timing-dependent first compiles
+    could land inside a measured TTFT window — the elasticity win has its
+    own gated benchmark (the decode-scaling sweep in BENCH_decode.json).
 
     Reactive requests are injected by WALL-CLOCK deadline through
     ``RealAgentXPUEngine.set_arrival_source`` (the single-threaded stand-in
@@ -423,7 +516,7 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
             cfg, params, max_len=max_len,
             pool_slots=n_pro + max(2, n_inj),
             max_fused_steps=max_fused, abortable_runs=abortable,
-            decode_segment_steps=segment)
+            decode_segment_steps=segment, elastic_decode=False)
         be = eng.backend
         # warm-up 1: proactive-only trace — compiles the prefill/decode
         # shapes of the saturating load; a second, fully-compiled serve of
@@ -523,6 +616,16 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
 
     baseline = run_mode(False)
     abortable = run_mode(True)
+    for row in (baseline, abortable):
+        # a mode whose deadlines all landed past the run's drain measured
+        # NOTHING — fail the benchmark loudly instead of writing a fake
+        # 0.0 ttft_reduction that check_regression would misreport as a
+        # latency regression
+        if not row["n_injected"]:
+            raise RuntimeError(
+                f"reactive_latency ({row['mode']}): 0 of {n_inj} "
+                f"injections landed inside the run — shrink the deadline "
+                f"offsets or raise BENCH_REACTIVE_TOKENS/REQS")
     reduction = (baseline["reactive_ttft_p50_ms"] or 0.0) / \
         max(abortable["reactive_ttft_p50_ms"] or 1e9, 1e-9)
     ratio = abortable["proactive_tokens_per_s"] / \

@@ -36,6 +36,10 @@ def main():
                     help="abortable-run segment length")
     ap.add_argument("--no-abortable-runs", action="store_true",
                     help="eager fused runs, no plan truncation (PR 2)")
+    ap.add_argument("--no-elastic-decode", action="store_true",
+                    help="full-pool decode dispatch: every iteration "
+                         "computes all pool rows over the whole max_len "
+                         "ring (the decode-scaling-sweep baseline)")
     ap.add_argument("--inject-mid-stream", action="store_true",
                     help="submit the reactive request from an on_token "
                          "callback DURING the run (streaming arrival path) "
@@ -70,7 +74,8 @@ def main():
                              max_len=256,
                              max_fused_steps=args.max_fused_steps,
                              abortable_runs=not args.no_abortable_runs,
-                             decode_segment_steps=args.decode_segment_steps)
+                             decode_segment_steps=args.decode_segment_steps,
+                             elastic_decode=not args.no_elastic_decode)
     printer = stream_printer() if args.stream else None
     state = {"tokens": 0, "injected": False}
     # fire well inside the run even for tiny --out-tokens traces
@@ -122,6 +127,9 @@ def main():
     pig_steps = getattr(eng.last_sched, "piggyback_steps", 0)
     print(f"piggybacked runs    : {pig} fused runs ({pig_steps} steps) "
           f"committed under live prefills")
+    print(f"elastic decode      : last dispatch {st['decode_rows']}"
+          f"/{st['pool_slots']} rows x kv_limit {st['decode_kv_limit']}/256 "
+          f"({st['kv_bytes_decode']} KV bytes streamed)")
     print(f"host syncs          : {st['host_syncs']} "
           f"(one per fused segment boundary, not per token)")
     print(f"prefill device calls: {st['prefill_device_calls']} "

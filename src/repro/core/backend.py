@@ -10,9 +10,11 @@ actually runs.  Two implementations:
   JaxRealBackend  real token generation on a device-resident slot-pool KV
                   cache: all inference callables donate their pool buffers
                   (in-place update, no per-call copy), per-slot last tokens
-                  and the batch mask live on device, and scheduler-announced
+                  and the batch mask live on device, scheduler-announced
                   fused runs execute many decode iterations as one jitted
-                  ``lax.scan`` with a single host sync at the boundary.
+                  ``lax.scan`` with a single host sync at the boundary, and
+                  every decode dispatch is elastic in both axes — bounded
+                  to the pow-2 live rows and live KV prefix (DESIGN.md §9).
 
 Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
 
@@ -35,6 +37,7 @@ Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
@@ -157,7 +160,8 @@ class JaxRealBackend(ExecutionBackend):
                  dtype=None, device_resident: bool = True,
                  in_pool_prefill: Optional[bool] = None,
                  abortable_runs: bool = True,
-                 decode_segment_steps: int = 8):
+                 decode_segment_steps: int = 8,
+                 elastic_decode: bool = True):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -192,13 +196,24 @@ class JaxRealBackend(ExecutionBackend):
         # kernel boundary (DESIGN.md §8).
         self.abortable_runs = abortable_runs
         self.decode_segment_steps = max(int(decode_segment_steps), 1)
+        # elastic_decode=False restores the full-pool decode dispatch (every
+        # iteration computes all pool rows over the whole max_len ring) —
+        # the measurable baseline of the decode-scaling sweep in
+        # BENCH_decode.json.  Elastic dispatch (DESIGN.md §9) bounds each
+        # decode program to the leading pow-2 live rows and the pow-2 live
+        # KV prefix; it leans on donation-through-views, so legacy
+        # device_resident=False implies full-pool too.
+        self.elastic_decode = bool(elastic_decode) and device_resident
         self.max_len = max_len
         self.dtype = dtype or jnp.float32
         self.pool_slots = max(int(pool_slots), 1)
         self._pool = init_cache(cfg, params, self.pool_slots, max_len,
                                 self.dtype)
-        self._free: Deque[int] = deque(range(self.pool_slots))
+        # min-heap: rebinding always takes the LOWEST free slot, so the live
+        # high-water mark (and with it the elastic row bound) stays minimal
+        self._free: List[int] = list(range(self.pool_slots))
         self._slot: Dict[int, int] = {}  # req id -> pool slot
+        self._slot_pos: Dict[int, int] = {}  # pool slot -> live row position
         self._scratch: Dict[int, object] = {}  # req id -> B=1 prefill cache
         self._scratch_pos: Dict[int, int] = {}
         self._first: Dict[int, int] = {}  # first token (from last chunk)
@@ -247,6 +262,13 @@ class JaxRealBackend(ExecutionBackend):
         self.prefill_host_syncs = 0  # first-token fetches (1 per prefill)
         self.bind_device_calls = 0  # full-row bind scatters (0 in-pool)
         self.kv_bytes_prefill = 0  # prompt-phase KV bytes written
+        # elastic decode accounting (DESIGN.md §9): extent of the most
+        # recent decode dispatch and the cumulative KV bytes decode
+        # programs streamed (rows x kv_limit x steps x per-slot ring bytes
+        # — the full-pool baseline pays pool x max_len every step)
+        self.decode_rows = 0
+        self.decode_kv_limit = 0
+        self.kv_bytes_decode = 0
 
     # -- jitted callable cache (compilation count is O(log max_len)) --------
     def _jitted(self, key: tuple, build, donate=()):
@@ -270,30 +292,68 @@ class JaxRealBackend(ExecutionBackend):
             return fn
         return self._jitted(("extend", c), build, donate=(1,))
 
-    def _decode_fn(self, pool_size: int):
-        from repro.models import decode_step
+    def _decode_fn(self, pool_size: int, rows: Optional[int] = None,
+                   kv_limit: Optional[int] = None):
+        """One masked decode iteration, elastic in both axes (DESIGN.md §9):
+        the program computes only the leading ``rows`` pool rows (static
+        slice — every live slot sits below the pow-2 row bound because the
+        free list prefers low slots) over a ``kv_limit``-bounded ring view,
+        then writes the advanced prefix back in place on the donated pool
+        (``kvcache.write_rows_prefix``).  ``rows == pool`` and ``kv_limit ==
+        max_len`` reproduce the full-pool program bit-for-bit (the
+        ``elastic_decode=False`` / ring-wrap fallback path)."""
+        from repro.models import decode_step, slice_rows, write_rows_prefix
         cfg = self.cfg
         jnp = self._jnp
+        rows = pool_size if rows is None else rows
+        kvl = self.max_len if kv_limit is None else kv_limit
+        max_len = self.max_len
 
         def build():
-            def fn(params, cache, toks, mask):
-                nxt, _, cache = decode_step(cfg, params, cache, toks, mask)
-                return nxt, jnp.where(mask, nxt, toks), cache
+            def fn(params, pool, toks, mask):
+                sub = slice_rows(pool, rows) if rows < pool_size else pool
+                nxt, _, sub = decode_step(cfg, params, sub, toks[:rows],
+                                          mask[:rows], kv_limit=kvl,
+                                          full_alloc=max_len)
+                new_t = jnp.where(mask[:rows], nxt, toks[:rows])
+                if rows < pool_size:
+                    pool = write_rows_prefix(pool, sub, rows, kvl, max_len)
+                    toks = toks.at[:rows].set(new_t)
+                else:
+                    pool, toks = sub, new_t
+                return nxt, toks, pool
             return fn
-        return self._jitted(("decode", pool_size), build, donate=(1, 2))
-
-    def _decode_run_fn(self, pool_size: int, n_steps: int):
-        from repro.models import decode_run
-        cfg = self.cfg
-
-        def build():
-            def fn(params, cache, toks, mask):
-                block, toks, cache = decode_run(cfg, params, cache, toks,
-                                                mask, n_steps)
-                return block, toks, cache
-            return fn
-        return self._jitted(("decode_run", pool_size, n_steps), build,
+        return self._jitted(("decode", pool_size, rows, kvl), build,
                             donate=(1, 2))
+
+    def _decode_run_fn(self, pool_size: int, n_steps: int,
+                       rows: Optional[int] = None,
+                       kv_limit: Optional[int] = None):
+        """``n_steps`` fused iterations with the same two-axis elasticity as
+        :meth:`_decode_fn`; the caller's ``kv_limit`` covers the run's END
+        (``next_pow2(max live pos + n_steps)``) so every position written
+        mid-scan stays inside the bounded view."""
+        from repro.models import decode_run, slice_rows, write_rows_prefix
+        cfg = self.cfg
+        rows = pool_size if rows is None else rows
+        kvl = self.max_len if kv_limit is None else kv_limit
+        max_len = self.max_len
+
+        def build():
+            def fn(params, pool, toks, mask):
+                sub = slice_rows(pool, rows) if rows < pool_size else pool
+                block, t, sub = decode_run(cfg, params, sub, toks[:rows],
+                                           mask[:rows], n_steps,
+                                           kv_limit=kvl, full_alloc=max_len)
+                if rows < pool_size:
+                    pool = write_rows_prefix(pool, sub, rows, kvl, max_len)
+                    toks = toks.at[:rows].set(t)
+                else:
+                    pool, toks = sub, t
+                return block, toks, pool
+            return fn
+        return self._jitted(("decode_run", pool_size, n_steps, rows, kvl),
+                            build, donate=(1, 2))
 
     def _bind_fn(self, pool_size: int):
         from repro.models import write_slot
@@ -390,7 +450,8 @@ class JaxRealBackend(ExecutionBackend):
                          self.dtype)
         # un-jitted on purpose: builds fresh (donation-safe) buffers
         self._pool = copy_into_prefix(new, old, p)
-        self._free.extend(range(p, self.pool_slots))
+        for s in range(p, self.pool_slots):
+            heapq.heappush(self._free, s)
         self._toks = jnp.concatenate(
             [self._toks, jnp.zeros((p,), jnp.int32)])
         self._mask = jnp.concatenate([self._mask, jnp.zeros((p,), bool)])
@@ -398,9 +459,13 @@ class JaxRealBackend(ExecutionBackend):
             [self._mask_host, np.zeros((p,), bool)])
 
     def _alloc_slot(self, rid: int) -> int:
+        """Bind the LOWEST free slot (min-heap): live rows stay compacted at
+        the front of the pool, so the elastic row bound
+        (``next_pow2(high_water + 1)``, DESIGN.md §9) tracks occupancy
+        instead of allocation history."""
         if not self._free:
             self._grow_pool()
-        slot = self._free.popleft()
+        slot = heapq.heappop(self._free)
         self._slot[rid] = slot
         return slot
 
@@ -551,7 +616,7 @@ class JaxRealBackend(ExecutionBackend):
                 # — every rebind must run, and runs, the ``fresh`` reset)
                 # and there is no token to decode on; return the never
                 # masked-in slot to the free list
-                self._free.append(self._slot.pop(rid))
+                heapq.heappush(self._free, self._slot.pop(rid))
                 self._row_pos.pop(rid, None)
                 return
             # the last chunk's ``emit`` program already committed the first
@@ -575,6 +640,9 @@ class JaxRealBackend(ExecutionBackend):
             self._scratch_pos.pop(rid, None)
             self.bind_device_calls += 1
             self.kv_bytes_prefill += self._bind_row_bytes
+        # host-known row progress: decode dispatches derive their static
+        # pow-2 kv_limit from the max live position of the batch (§9)
+        self._slot_pos[self._slot[rid]] = req.prompt_len
         self._last[rid] = first
         self._texts[rid] = [first]
         self._emit(req, first)
@@ -600,6 +668,42 @@ class JaxRealBackend(ExecutionBackend):
         self.fused_runs += 1
         self._run_segment()
 
+    # -- elastic dispatch extents (DESIGN.md §9) ------------------------------
+    def _elastic_extent(self, slots: List[int], n: int) -> tuple:
+        """Static ``(rows, kv_limit)`` jit-key pair for a decode dispatch of
+        ``n`` iterations over pool ``slots``:
+
+          rows      ``next_pow2(high_water_live_slot + 1)`` — every dispatched
+                    slot sits below it (low-slot allocation keeps it tight);
+                    bound slots at or beyond it are simply not computed, and
+                    bound-but-inactive slots below it are computed-and-masked
+                    exactly as in the full-pool program.
+          kv_limit  ``next_pow2(max live row position + n)`` — covers every
+                    ring slot the run can read or write, since a non-wrapped
+                    row's ring slot index equals its position.  A row that
+                    wrapped (pos >= max_len) or whose progress is unknown
+                    pushes the bound to ``max_len``, turning the truncation
+                    into the identity — the exactness-first fallback.
+                    Window-shrunk ring leaves (alloc < max_len) are never
+                    truncated at all (`kvcache.truncate_rings`).
+        """
+        if not self.elastic_decode:
+            return self.pool_slots, self.max_len
+        rows = min(_next_pow2(max(slots) + 1), self.pool_slots)
+        pos = [self._slot_pos.get(s) for s in slots]
+        if any(p is None for p in pos):
+            return rows, self.max_len
+        return rows, min(_next_pow2(max(pos) + n), self.max_len)
+
+    def _account_decode(self, slots: List[int], n: int, rows: int, kvl: int):
+        """Advance host-tracked row positions past an ``n``-step dispatch
+        and fold its extent into the elastic counters."""
+        for s in slots:
+            if s in self._slot_pos:
+                self._slot_pos[s] += n
+        self.decode_rows, self.decode_kv_limit = rows, kvl
+        self.kv_bytes_decode += n * rows * kvl * self._kv_token_bytes
+
     def _run_segment(self) -> None:
         """Launch the next bounded ``lax.scan`` segment of the committed run
         and fetch its token block (ONE host sync per segment)."""
@@ -607,12 +711,15 @@ class JaxRealBackend(ExecutionBackend):
             if self.abortable_runs else self._fused_left
         if n <= 0:
             return
+        slots = sorted(self._fused_slots)
         blocks = []
         for b in _pow2_buckets(n):
-            fn = self._decode_run_fn(self.pool_slots, b)
+            rows, kvl = self._elastic_extent(slots, b)
+            fn = self._decode_run_fn(self.pool_slots, b, rows, kvl)
             block, self._toks, self._pool = fn(self.params, self._pool,
                                                self._toks, self._mask)
             self.decode_device_calls += 1
+            self._account_decode(slots, b, rows, kvl)
             blocks.append(block)
         full = self._np.asarray(self._jnp.concatenate(blocks, axis=0)
                                 if len(blocks) > 1 else blocks[0])
@@ -659,9 +766,11 @@ class JaxRealBackend(ExecutionBackend):
                 mask_h[s] = True
                 toks_h[s] = self._last[r.id]
             toks, mask = self._jnp.asarray(toks_h), self._jnp.asarray(mask_h)
-        fn = self._decode_fn(self.pool_slots)
+        rows, kvl = self._elastic_extent(slots, 1)
+        fn = self._decode_fn(self.pool_slots, rows, kvl)
         nxt, self._toks, self._pool = fn(self.params, self._pool, toks, mask)
         self.decode_device_calls += 1
+        self._account_decode(slots, 1, rows, kvl)
         nxt = self._np.asarray(nxt)
         self.host_syncs += 1
         self._commit(live, nxt)
@@ -704,7 +813,8 @@ class JaxRealBackend(ExecutionBackend):
             self._toks, self._mask = fn(self._toks, self._mask,
                                         self._jnp.int32(slot))
             self._mask_host[slot] = False
-            self._free.append(slot)
+            self._slot_pos.pop(slot, None)
+            heapq.heappush(self._free, slot)
         self._last.pop(req.id, None)
         self._scratch.pop(req.id, None)
         self._scratch_pos.pop(req.id, None)
@@ -746,4 +856,7 @@ class JaxRealBackend(ExecutionBackend):
                 "prefill_host_syncs": self.prefill_host_syncs,
                 "bind_device_calls": self.bind_device_calls,
                 "kv_bytes_prefill": self.kv_bytes_prefill,
+                "decode_rows": self.decode_rows,
+                "decode_kv_limit": self.decode_kv_limit,
+                "kv_bytes_decode": self.kv_bytes_decode,
                 "pool_slots": self.pool_slots}

@@ -82,9 +82,10 @@ class AgentXPUEngine:
 class RealAgentXPUEngine(AgentXPUEngine):
     """Real-execution mode: scheduler kernel completions drive the
     ``JaxRealBackend`` (device-resident slot-pool KV cache with buffer
-    donation, zero-copy in-pool prefill, batched masked decode,
-    scheduler-announced fused multi-step decode runs, streaming token
-    callbacks).
+    donation, zero-copy in-pool prefill, batched masked decode — elastic
+    in both the live-row and live-KV-prefix axes (``elastic_decode``,
+    DESIGN.md §9) — scheduler-announced fused multi-step decode runs,
+    streaming token callbacks).
 
     Host<->device synchronization happens only at scheduler-visible
     boundaries: prefill fetches one first token per request, and within a
@@ -100,6 +101,7 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  max_fused_steps: int = 32, device_resident: bool = True,
                  in_pool_prefill: Optional[bool] = None,
                  abortable_runs: bool = True, decode_segment_steps: int = 8,
+                 elastic_decode: bool = True,
                  **sched_kw):
         # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
         # the scheduler's plan-truncation arithmetic must mirror the
@@ -114,7 +116,8 @@ class RealAgentXPUEngine(AgentXPUEngine):
             cfg, params, pool_slots=pool_slots or self.heg.B_max,
             max_len=max_len, dtype=dtype, device_resident=device_resident,
             in_pool_prefill=in_pool_prefill, abortable_runs=abortable_runs,
-            decode_segment_steps=decode_segment_steps)
+            decode_segment_steps=decode_segment_steps,
+            elastic_decode=elastic_decode)
         self._pending: List[Request] = []
         self._live: List[Request] = []  # everything owned by the active run
 
@@ -165,7 +168,16 @@ class RealAgentXPUEngine(AgentXPUEngine):
         submitted *during* the run via streaming arrivals)."""
         reqs, self._pending = self._pending, []
         self._live = list(reqs)
-        metrics = self._run(reqs, max_time)
+        try:
+            metrics = self._run(reqs, max_time)
+        except BaseException:
+            # a user hook (arrival source, on_token callback, mid-run
+            # submit) raised out of the live event loop: free every slot
+            # the failed run may still hold — leaking them would shrink
+            # the pool for all subsequent runs on this engine
+            self.backend.release(self._live, 0.0)
+            self._live = []
+            raise
         done = {r.id for r in metrics.completed}
         # requests cut off by max_time must not hold slots/scratch forever
         self.backend.release([r for r in self._live if r.id not in done],

@@ -505,9 +505,12 @@ class AgentXpuScheduler(SchedulerBase):
                 return 1
             slack = min(self.ctx[o].etc() for o in others)
             seg = self.decode_segment_steps
-            n = min(steps, int(slack / max(t_iter, 1e-9)))
+            # cap BEFORE rounding down to whole segments: the committed
+            # plan must end on an abort-segment boundary even when
+            # max_fused_steps is not a segment multiple
+            n = min(steps, int(slack / max(t_iter, 1e-9)),
+                    self.max_fused_steps)
             steps = (n // seg) * seg  # whole segments only; 0 -> no fusion
-            steps = min(steps, self.max_fused_steps)
             if steps > 1:
                 self.piggyback_runs += 1  # _maybe_fuse announces iff > 1
                 self.piggyback_steps += steps

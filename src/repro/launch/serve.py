@@ -61,6 +61,11 @@ def main(argv=None):
                     help="with --real: prefill into a per-request scratch "
                          "cache and bind-scatter it at completion (double "
                          "KV write; baseline of BENCH_prefill.json)")
+    ap.add_argument("--no-elastic-decode", action="store_true",
+                    help="with --real: dispatch every decode over the FULL "
+                         "pool_slots x max_len cache instead of the pow-2 "
+                         "live-row / live-prefix bounds (the full-pool "
+                         "baseline of BENCH_decode.json's scaling sweep)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -91,7 +96,8 @@ def main(argv=None):
             device_resident=not args.no_device_resident,
             # None follows device_resident (in-pool prefill leans on
             # donation; --no-device-resident restores the full legacy flow)
-            in_pool_prefill=False if args.no_in_pool_prefill else None)
+            in_pool_prefill=False if args.no_in_pool_prefill else None,
+            elastic_decode=not args.no_elastic_decode)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -108,6 +114,10 @@ def main(argv=None):
                   f"{st['pool_slots']} pool slots")
             print(f"[real] preemption: {st['aborted_runs']} runs truncated "
                   f"({st['aborted_steps']} unlaunched steps cancelled)")
+            print(f"[real] elastic decode: last dispatch "
+                  f"{st['decode_rows']}/{st['pool_slots']} rows x "
+                  f"kv_limit {st['decode_kv_limit']}/256, "
+                  f"{st['kv_bytes_decode']} KV bytes streamed")
             print(f"[real] prefill: {st['prefill_device_calls']} device "
                   f"calls, {st['prefill_host_syncs']} host syncs, "
                   f"{st['bind_device_calls']} bind scatters, "

@@ -2,13 +2,16 @@ from repro.models.transformer import (decode_run, decode_step, extend,
                                       extend_row, forward, init_cache,
                                       init_params, layout, prefill)
 from repro.models.kvcache import (cache_bytes, copy_into_prefix, read_row,
-                                  reset_row, select_rows, truncate_rings,
-                                  write_row_slice, write_slot)
+                                  reset_row, select_rows, slice_rows,
+                                  truncate_rings, untruncate_rings,
+                                  write_row_slice, write_rows_prefix,
+                                  write_slot)
 from repro.models.params import (batch_pspec, cache_pspecs, param_pspecs,
                                  param_shardings)
 
 __all__ = ["cache_bytes", "copy_into_prefix", "decode_run", "decode_step",
            "extend", "extend_row", "forward", "init_cache", "init_params",
            "layout", "prefill", "read_row", "reset_row", "select_rows",
-           "truncate_rings", "write_row_slice", "write_slot", "batch_pspec",
-           "cache_pspecs", "param_pspecs", "param_shardings"]
+           "slice_rows", "truncate_rings", "untruncate_rings",
+           "write_row_slice", "write_rows_prefix", "write_slot",
+           "batch_pspec", "cache_pspecs", "param_pspecs", "param_shardings"]

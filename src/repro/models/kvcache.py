@@ -152,15 +152,19 @@ def write_row_slice(pool, one, slot, start, c):
 
 
 def truncate_rings(one, kv_limit, full):
-    """Static prefix view of a batch-1 cache for in-pool prefill: ring
-    leaves that can never wrap during prefill (``alloc`` equals ``full``,
-    the cache's build-time ``max_len`` — positions stay below it, so no
-    sliding window shrank the ring) are sliced to their first ``kv_limit``
-    slots.  While positions stay below ``kv_limit`` the dropped slots are
-    all empty (``slot_pos == -1`` after ``reset_row``), so attention output
-    is unchanged — but each chunk only reads and scores O(live prefix) keys
-    instead of O(alloc).  Windowed leaves (``alloc < full``) may wrap
-    mid-prefill and keep their full ring."""
+    """Static prefix view of a cache: ring leaves that can never wrap
+    (``alloc`` equals ``full``, the cache's build-time ``max_len`` —
+    positions stay below it, so no sliding window shrank the ring) are
+    sliced to their first ``kv_limit`` slots.  While positions stay below
+    ``kv_limit`` the dropped slots are all empty (``slot_pos == -1`` after
+    ``reset_row``), so attention output is unchanged — but the program only
+    reads and scores O(live prefix) keys instead of O(alloc).  Windowed
+    leaves (``alloc < full``) may wrap and keep their full ring.
+
+    Batch-size agnostic: the alloc axis is addressed relative to the
+    section layout (axis 1 for ``head``/``tail``, 2 for ``blocks``), so the
+    same view serves in-pool prefill (batch-1 rows, DESIGN.md §7) and
+    live-prefix-bounded decode over a slot pool (DESIGN.md §9)."""
     from jax.tree_util import DictKey, tree_map_with_path
 
     if not full or kv_limit >= full:
@@ -178,6 +182,77 @@ def truncate_rings(one, kv_limit, full):
     for key in ("head", "tail"):
         out[key] = tree_map_with_path(fix(1), one[key])
     out["blocks"] = tree_map_with_path(fix(2), one["blocks"])
+    return out
+
+
+def untruncate_rings(full_cache, view, kv_limit, full):
+    """Inverse of :func:`truncate_rings`: write an advanced ``kv_limit``
+    view back over the first ``kv_limit`` ring slots of ``full_cache``.
+    Ring slots at and beyond ``kv_limit`` were provably untouched by the
+    bounded program (every live position stayed below the limit), so they
+    keep ``full_cache``'s buffers; non-ring leaves (positions, recurrent /
+    shift / conv state) are full-shape in the view and taken verbatim.
+    Under jit with ``full_cache`` donated the prefix write lowers to an
+    in-place dynamic-update-slice — O(kv_limit) bytes per ring leaf."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    if not full or kv_limit >= full:
+        return view
+
+    def fix(axis):
+        def f(path, p, v):
+            name = path[-1].key if isinstance(path[-1], DictKey) else ""
+            if name in _RING_PAYLOAD and p.shape[axis] == full \
+                    and v.shape[axis] == kv_limit:
+                idx = (slice(None),) * axis + (slice(0, kv_limit),)
+                return p.at[idx].set(v)
+            return v
+        return f
+
+    out = dict(view)
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix(1), full_cache[key], view[key])
+    out["blocks"] = tree_map_with_path(fix(2), full_cache["blocks"],
+                                       view["blocks"])
+    return out
+
+
+def slice_rows(pool, rows):
+    """Static leading-rows view of a pool cache (live-row sub-pool decode,
+    DESIGN.md §9): batch rows ``[0, rows)`` of every section.  With the
+    free list preferring low slots, ``rows = next_pow2(high_water + 1)``
+    covers every live request while a half-empty pool stops paying for its
+    dead rows' attention, MLP and recurrent-state math."""
+    return _map_batched(lambda p: p[:rows], lambda p: p[:, :rows], pool)
+
+
+def write_rows_prefix(pool, sub, rows, kv_limit, full):
+    """Write an advanced ``rows``-row sub-pool back into the leading rows
+    of the full pool, bounding ring traffic to the ``kv_limit`` prefix the
+    bounded program could have touched (``kv_limit >= full`` writes whole
+    rings — the ring-wrap fallback).  Rows at and beyond ``rows`` alias in
+    place under donation, exactly like the other prefix write-backs."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    kv = None if (not full or kv_limit >= full) else kv_limit
+
+    def fix(axis):
+        def f(path, p, s):
+            name = path[-1].key if isinstance(path[-1], DictKey) else ""
+            row_idx = (slice(None),) * axis + (slice(0, rows),)
+            if kv is not None and name in _RING_PAYLOAD \
+                    and p.shape[axis + 1] == full:
+                idx = row_idx + (slice(0, kv),)
+                return p.at[idx].set(s[(slice(None),) * axis
+                                       + (slice(None), slice(0, kv))])
+            return p.at[row_idx].set(s)
+        return f
+
+    out = dict(pool)
+    out["pos"] = pool["pos"].at[:rows].set(sub["pos"])
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix(0), pool[key], sub[key])
+    out["blocks"] = tree_map_with_path(fix(1), pool["blocks"], sub["blocks"])
     return out
 
 

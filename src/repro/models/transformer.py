@@ -736,7 +736,17 @@ def extend_row(cfg, params, pool, tokens, slot, kv_limit=None,
                                            tokens.shape[1])
 
 
-def decode_step(cfg, params, cache, tokens, active, **kw):
+def _decode_step_inner(cfg, params, cache, tokens, active, **kw):
+    """One masked decode iteration on whatever cache view it is handed —
+    the un-bounded core shared by :func:`decode_step` and the scan body of
+    :func:`decode_run` (which truncates once outside the scan)."""
+    logits, new_cache = extend(cfg, params, cache, tokens[:, None], **kw)
+    new_cache = kvcache.select_rows(active, new_cache, cache)
+    return logits.argmax(-1).astype(jnp.int32), logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, active, kv_limit=None,
+                full_alloc=None, **kw):
     """One masked decode iteration over a slot-pool cache (DESIGN.md §3).
 
     tokens: (B,) int32 last token per pool slot; active: (B,) bool slot mask.
@@ -745,13 +755,29 @@ def decode_step(cfg, params, cache, tokens, active, **kw):
     unbound / not-dispatched slots neither corrupt their KV state nor advance
     their position.  Returns (next_tokens (B,), logits (B, V), new_cache)
     with greedy next tokens computed on-device.
+
+    ``kv_limit`` (static, pow-2) bounds the live prefix of every ACTIVE row
+    (mirroring :func:`extend_row`) and ``full_alloc`` is the cache's
+    build-time ``max_len``: attention runs on a ``kvcache.truncate_rings``
+    view scoring O(kv_limit) keys instead of O(alloc), then the advanced
+    prefix writes back in place (``kvcache.untruncate_rings``).  The caller
+    guarantees ``pos < kv_limit`` holds for every active row after the step
+    — a row that wrapped its ring (``pos >= full_alloc``) needs
+    ``kv_limit >= full_alloc``, which makes both bounds the identity
+    (exactness first).  Windowed leaves (``alloc < full_alloc``) always
+    keep their full (already small) ring.
     """
-    logits, new_cache = extend(cfg, params, cache, tokens[:, None], **kw)
-    new_cache = kvcache.select_rows(active, new_cache, cache)
-    return logits.argmax(-1).astype(jnp.int32), logits, new_cache
+    view = cache if kv_limit is None else \
+        kvcache.truncate_rings(cache, kv_limit, full_alloc)
+    nxt, logits, view = _decode_step_inner(cfg, params, view, tokens,
+                                           active, **kw)
+    if kv_limit is not None:
+        view = kvcache.untruncate_rings(cache, view, kv_limit, full_alloc)
+    return nxt, logits, view
 
 
-def decode_run(cfg, params, cache, tokens, active, n_steps: int, **kw):
+def decode_run(cfg, params, cache, tokens, active, n_steps: int,
+               kv_limit=None, full_alloc=None, **kw):
     """``n_steps`` fused masked decode iterations under ONE ``lax.scan``
     (DESIGN.md §6).
 
@@ -762,18 +788,30 @@ def decode_run(cfg, params, cache, tokens, active, n_steps: int, **kw):
     masked exactly as in :func:`decode_step`, so a fused run is token-exact
     against ``n_steps`` separate ``decode_step`` calls.
 
+    ``kv_limit``/``full_alloc`` bound the live prefix exactly as in
+    :func:`decode_step`, with the truncation hoisted OUT of the scan (one
+    view, one write-back for the whole run).  Positions advance ``n_steps``
+    times inside the scan, so the caller's bound must cover the run's END:
+    ``max live pos + n_steps <= kv_limit`` across the active rows.
+
     tokens: (B,) int32 last token per pool slot; active: (B,) bool.
     Returns (token_block (n_steps, B), final_tokens (B,), new_cache).
     """
-    def body(carry, _):
-        cache, toks = carry
-        nxt, _, cache = decode_step(cfg, params, cache, toks, active, **kw)
-        toks = jnp.where(active, nxt, toks)
-        return (cache, toks), nxt
+    view = cache if kv_limit is None else \
+        kvcache.truncate_rings(cache, kv_limit, full_alloc)
 
-    (cache, toks), block = jax.lax.scan(body, (cache, tokens), None,
-                                        length=int(n_steps))
-    return block, toks, cache
+    def body(carry, _):
+        view, toks = carry
+        nxt, _, view = _decode_step_inner(cfg, params, view, toks, active,
+                                          **kw)
+        toks = jnp.where(active, nxt, toks)
+        return (view, toks), nxt
+
+    (view, toks), block = jax.lax.scan(body, (view, tokens), None,
+                                       length=int(n_steps))
+    if kv_limit is not None:
+        view = kvcache.untruncate_rings(cache, view, kv_limit, full_alloc)
+    return block, toks, view
 
 
 def prefill(cfg, params, tokens, *, max_len=None, window=None,

@@ -7,6 +7,7 @@ mid-prefill slot can neither double-free nor rebind stale."""
 import copy
 
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core import AgentXPUEngine, Priority, Request
@@ -225,6 +226,36 @@ def test_arrival_source_polled_each_turn():
     assert done[80].arrival_time >= t_mid
     ref = _reference_tokens(cfg, params, reactive.tokens, 4, 128)
     assert eng.output_tokens(80) == ref
+
+
+def test_failed_run_releases_slots():
+    """A user hook raising out of the live event loop (streaming-arrival
+    seam) must not leak bound pool slots: the failed run releases its
+    requests and the engine stays serviceable."""
+    cfg, params, eng = _tiny_real_engine(pool_slots=2)
+    rng = np.random.default_rng(67)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 8)
+    state = {"n": 0}
+
+    def boom(req, tok):
+        state["n"] += 1
+        if state["n"] >= 3:
+            raise RuntimeError("user callback exploded")
+
+    for r in reqs:
+        eng.submit(r, on_token=boom)
+    with pytest.raises(RuntimeError, match="exploded"):
+        eng.run()
+    be = eng.backend
+    assert not be._slot and len(be._free) == be.pool_slots
+    # the same engine serves a fresh trace token-exactly afterwards
+    reqs2 = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 4)
+    for i, r in enumerate(reqs2):
+        r.id = 100 + i
+    eng.serve(copy.deepcopy(reqs2))
+    for r in reqs2:
+        ref = _reference_tokens(cfg, params, r.tokens, 4, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
 
 
 # -- release/rebind safety (satellite bugfix check) --------------------------
