@@ -42,6 +42,10 @@ CHECKS = [
     # dev-machine headroom in the committed number.
     ("BENCH_decode.json", "elastic_speedup", "higher", 0.15, 1.5),
     ("BENCH_prefill.json", "speedup", "higher", 0.15, 2.0),
+    # shared-prefix KV reuse (DESIGN.md §10): hit-vs-cold prompt tokens/s
+    # at the serve shape (8 flows x shared 256-token system prompt).  Cap
+    # 3.0 = the acceptance floor; the gate trips below 2.55x.
+    ("BENCH_prefill.json", "prefix_reuse.speedup", "higher", 0.15, 3.0),
     # reactive TTFT gate: ttft_reduction = baseline_p50 / abortable_p50, so
     # a >25% reactive-TTFT increase shows as a >25% drop of the reduction.
     # Cap 10 -> floor 8, double the >=5x acceptance criterion.

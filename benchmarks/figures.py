@@ -689,8 +689,12 @@ def bench_prefill_throughput() -> Tuple[List[dict], float]:
             for i in range(n_req)]
 
     def run_mode(in_pool):
+        # prefix_cache OFF: the trace reuses identical prompts across
+        # warm-up and reps, so shared-prefix hits (bench_prefix_reuse's
+        # subject) would contaminate the in-pool vs scratch comparison
         be = JaxRealBackend(cfg, params, pool_slots=n_req, max_len=max_len,
-                            dtype=jnp.float32, in_pool_prefill=in_pool)
+                            dtype=jnp.float32, in_pool_prefill=in_pool,
+                            prefix_cache=False)
 
         def serve_prefills(reqs):
             for r in reqs:
@@ -751,7 +755,170 @@ def bench_prefill_throughput() -> Tuple[List[dict], float]:
     rows = [baseline, in_pool]
     out = {"n_requests": n_req, "prompt_len": plen, "chunk": chunk,
            "baseline": baseline, "in_pool": in_pool, "speedup": speedup}
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_prefill.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2, default=float)
+    _merge_bench_json("BENCH_prefill.json", out)
     return rows, speedup
+
+
+def _merge_bench_json(fname: str, update: dict) -> None:
+    """Read-merge-write a BENCH_*.json shared by several benchmarks
+    (prefill_throughput and prefix_reuse both own top-level keys of
+    BENCH_prefill.json), so either can run alone without clobbering the
+    other's committed metrics."""
+    path = os.path.join(os.path.dirname(__file__), "..", fname)
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+    doc.update(update)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
+
+
+def bench_prefix_reuse() -> Tuple[List[dict], float]:
+    """Shared-prefix KV reuse (BENCH_prefill.json / "prefix_reuse"):
+    hit-prefill vs cold-prefill prompt throughput and TTFT at the serve
+    shape the cache exists for — >= 8 flows sharing a 256-token system
+    prompt with short distinct tails.
+
+      cold  ``prefix_cache=False`` (the --no-prefix-cache baseline): every
+            flow forward-passes its full prompt
+      hit   a warm-up flow donates the system prompt; every measured flow
+            then serves the matched 256 tokens as ONE bounded KV copy and
+            forward-passes only its tail — including through donor-slot
+            rebinding (store promotion), which the rep structure forces
+
+    Exactness is asserted inside the bench: hit flows run ZERO forward
+    passes over matched tokens (``prefill_forward_tokens`` delta == tail
+    work only) and first tokens are identical to the cold serve of the
+    same prompts.  Derived: hit/cold prompt tokens-per-sec speedup
+    (acceptance floor 3x, gated in check_regression).  Env knobs:
+    BENCH_PREFIX_FLOWS, BENCH_PREFIX_SYS, BENCH_PREFIX_TAIL,
+    BENCH_PREFIX_REPS.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_tiny_config
+    from repro.core.backend import JaxRealBackend
+    from repro.models import init_params
+
+    # widened tiny model: the forward work a hit ELIDES grows with d_model^2
+    # while the KV copy it substitutes grows only with d_model, so the
+    # default 128-wide tiny config under-reports the win — at 128 both modes
+    # are XLA-dispatch-bound and the ratio collapses to call counts
+    cfg = dataclasses.replace(get_tiny_config("llama3-405b"),
+                              d_model=512, d_ff=1024, head_dim=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n_flows = int(os.environ.get("BENCH_PREFIX_FLOWS", "8"))
+    sys_len = int(os.environ.get("BENCH_PREFIX_SYS", "256"))
+    tail_len = int(os.environ.get("BENCH_PREFIX_TAIL", "32"))
+    reps = int(os.environ.get("BENCH_PREFIX_REPS", "3"))
+    max_len = 512
+    chunk = 128  # the HEG elastic-chunk knee of the evaluated archs
+    plen = sys_len + tail_len
+    sys_toks = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (1, sys_len))
+
+    def mk_flows(base_id, seed):
+        rng = np.random.default_rng(seed)
+        return [Request(
+            id=base_id + i, priority=Priority.PROACTIVE, prompt_len=plen,
+            max_new_tokens=1, arrival_time=0.0,
+            tokens=np.concatenate(
+                [sys_toks, rng.integers(0, cfg.vocab_size, (1, tail_len))],
+                axis=1))
+            for i in range(n_flows)]
+
+    def run_mode(prefix_cache):
+        be = JaxRealBackend(cfg, params, pool_slots=n_flows + 1,
+                            max_len=max_len, dtype=jnp.float32,
+                            prefix_cache=prefix_cache)
+
+        def serve(reqs, expect_hit):
+            """Serve prefills the way the scheduler drives them: consult
+            the prefix index at arrival, then chunk from seq_start = hit.
+            Returns (first tokens, per-flow TTFT walls)."""
+            firsts, ttfts = [], []
+            for r in reqs:
+                t0 = time.perf_counter()
+                be.register(r)
+                hit = be.prefix_hit(r)
+                if expect_hit:
+                    assert hit == sys_len, (hit, sys_len)
+                s = hit
+                while s < r.prompt_len:
+                    n = min(chunk, r.prompt_len - s)
+                    be.prefill_chunk(r, s, n, 0.0)
+                    s += n
+                be.prefill_done(r, 0.0)  # host-syncs the first token
+                ttfts.append(time.perf_counter() - t0)
+                firsts.append(int(be.output_tokens(r.id)[0]))
+            return firsts, ttfts
+
+        def retire(reqs):  # slot recycling is decode-side work: not timed
+            for r in reqs:
+                be.finish(r, 0.0)
+
+        # warm-up: compiles every shape; in hit mode flow 0 is the cold
+        # donor and later flows already consume hits
+        warm = mk_flows(0, seed=0)
+        serve(warm, expect_hit=False)
+        retire(warm)
+        prompt_tokens = n_flows * plen
+        best = None
+        firsts_by_rep = []
+        for rep in range(reps):
+            # fresh tails per rep: the hit must stay exactly sys_len (a
+            # repeated tail would deep-hit and overstate the win); retiring
+            # the previous rep freed every donor slot, so this rep's
+            # rebinds exercise promotion + store-sourced copies
+            reqs = mk_flows(1000 * (rep + 1), seed=rep + 1)
+            s0 = dict(be.stats())
+            t0 = time.perf_counter()
+            firsts, ttfts = serve(reqs, expect_hit=prefix_cache)
+            jax.block_until_ready(be._pool)
+            wall = time.perf_counter() - t0
+            s1 = dict(be.stats())
+            retire(reqs)
+            fwd = s1["prefill_forward_tokens"] - s0["prefill_forward_tokens"]
+            if prefix_cache:
+                # zero forward passes over matched tokens, by construction
+                assert fwd == n_flows * tail_len, (fwd, n_flows * tail_len)
+                assert s1["prefix_fallbacks"] == s0["prefix_fallbacks"]
+            else:
+                assert fwd == prompt_tokens, (fwd, prompt_tokens)
+            firsts_by_rep.append(firsts)
+            row = {
+                "prompt_tokens": prompt_tokens,
+                "wall_s": wall,
+                "tokens_per_s": prompt_tokens / max(wall, 1e-9),
+                "ttft_mean_ms": 1e3 * sum(ttfts) / len(ttfts),
+                "forward_tokens": fwd,
+                "kv_bytes_prefix_copied":
+                    s1["kv_bytes_prefix_copied"]
+                    - s0["kv_bytes_prefix_copied"],
+            }
+            if best is None or row["tokens_per_s"] > best["tokens_per_s"]:
+                best = row
+        return best, firsts_by_rep
+
+    cold, cold_firsts = run_mode(False)
+    hit, hit_firsts = run_mode(True)
+    # token-exactness: rep seeds match across modes, so every hit-served
+    # first token must equal its cold-prefill counterpart
+    assert hit_firsts == cold_firsts, "prefix reuse changed tokens"
+    cold["mode"], hit["mode"] = "cold", "hit"
+    speedup = hit["tokens_per_s"] / max(cold["tokens_per_s"], 1e-9)
+    out = {"prefix_reuse": {
+        "n_flows": n_flows, "system_prompt_len": sys_len,
+        "tail_len": tail_len, "chunk": chunk,
+        "cold": cold, "hit": hit, "speedup": speedup,
+        "ttft_reduction": cold["ttft_mean_ms"]
+        / max(hit["ttft_mean_ms"], 1e-9)}}
+    _merge_bench_json("BENCH_prefill.json", out)
+    return [cold, hit], speedup

@@ -30,6 +30,7 @@ BENCHES = [
     ("real_decode_batching", figures.bench_real_decode_batching),
     ("decode_throughput", figures.bench_decode_throughput),
     ("prefill_throughput", figures.bench_prefill_throughput),
+    ("prefix_reuse", figures.bench_prefix_reuse),
     ("reactive_latency", figures.bench_reactive_latency),
 ]
 
@@ -55,7 +56,7 @@ def main(argv=None) -> None:
         if args.only is None and args.quick and name in (
                 "fig6_proactive_only", "fig7_mixed", "ablation_mechanisms",
                 "real_decode_batching", "decode_throughput",
-                "prefill_throughput", "reactive_latency"):
+                "prefill_throughput", "prefix_reuse", "reactive_latency"):
             continue
         t0 = time.time()
         rows, derived = fn()

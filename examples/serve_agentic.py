@@ -40,6 +40,14 @@ def main():
                     help="full-pool decode dispatch: every iteration "
                          "computes all pool rows over the whole max_len "
                          "ring (the decode-scaling-sweep baseline)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV reuse: every prompt "
+                         "prefills cold (the hit-vs-cold baseline)")
+    ap.add_argument("--system-prompt-len", type=int, default=24,
+                    help="shared system-prompt tokens prepended to every "
+                         "flow's prompt (0 disables); with the prefix "
+                         "cache on, flows after the first start prefill "
+                         "at the hit boundary")
     ap.add_argument("--inject-mid-stream", action="store_true",
                     help="submit the reactive request from an on_token "
                          "callback DURING the run (streaming arrival path) "
@@ -54,19 +62,30 @@ def main():
           f"with {args.scheduler}")
 
     rng = np.random.default_rng(0)
+    # every flow of the agent shares one system prompt / tool schema —
+    # the traffic shape shared-prefix KV reuse (DESIGN.md §10) exists for
+    sys_len = max(args.system_prompt_len, 0)
+    sys_toks = rng.integers(0, cfg.vocab_size, (1, sys_len)) \
+        if sys_len else None
+
+    def mk_tokens(tail_len):
+        tail = rng.integers(0, cfg.vocab_size, (1, tail_len))
+        return tail if sys_toks is None else \
+            np.concatenate([sys_toks, tail], axis=1)
+
     reqs = []
     for i in range(args.n_proactive):
-        plen = int(rng.integers(24, 96))
+        toks = mk_tokens(int(rng.integers(24, 96)))
         reqs.append(Request(
-            id=i, priority=Priority.PROACTIVE, prompt_len=plen,
+            id=i, priority=Priority.PROACTIVE, prompt_len=toks.shape[1],
             max_new_tokens=args.out_tokens, arrival_time=i * 0.01,
-            tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+            tokens=toks))
     # the user interrupts mid-stream
-    plen = 48
+    toks = mk_tokens(48)
     reactive = Request(
-        id=len(reqs), priority=Priority.REACTIVE, prompt_len=plen,
+        id=len(reqs), priority=Priority.REACTIVE, prompt_len=toks.shape[1],
         max_new_tokens=args.out_tokens, arrival_time=0.08,
-        tokens=rng.integers(0, cfg.vocab_size, (1, plen)))
+        tokens=toks)
     if not args.inject_mid_stream:
         reqs.append(reactive)
 
@@ -75,7 +94,8 @@ def main():
                              max_fused_steps=args.max_fused_steps,
                              abortable_runs=not args.no_abortable_runs,
                              decode_segment_steps=args.decode_segment_steps,
-                             elastic_decode=not args.no_elastic_decode)
+                             elastic_decode=not args.no_elastic_decode,
+                             prefix_cache=not args.no_prefix_cache)
     printer = stream_printer() if args.stream else None
     state = {"tokens": 0, "injected": False}
     # fire well inside the run even for tiny --out-tokens traces
@@ -137,6 +157,13 @@ def main():
     print(f"bind scatters       : {st['bind_device_calls']} "
           f"(0 = zero-copy in-pool prefill)")
     print(f"prefill KV written  : {st['kv_bytes_prefill']} bytes")
+    print(f"prefix reuse        : {st['prefix_hits']} hit prefills, "
+          f"{st['prefix_hit_tokens']} prompt tokens copied not recomputed "
+          f"(hit rate {st['prefix_hit_rate']:.2f})")
+    print(f"prefix KV copied    : {st['kv_bytes_prefix_copied']} bytes in "
+          f"{st['prefix_copy_device_calls']} bounded copies "
+          f"({st['prefix_promotions']} donor rows promoted to the "
+          f"{st['prefix_store_entries']}-entry store)")
 
 
 if __name__ == "__main__":

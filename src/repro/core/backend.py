@@ -41,9 +41,18 @@ import heapq
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.core.prefixcache import (PrefixCache, prefix_reuse_supported)
 from repro.core.requests import Request
 
 TokenCallback = Callable[[Request, int], None]
+
+
+def _prompt_key(req: Request) -> tuple:
+    """Token-ID key of a request's prompt (the exactness currency of the
+    prefix index): a hit is only ever claimed on exact token equality."""
+    import numpy as np
+    return tuple(int(t) for t in
+                 np.asarray(req.tokens).reshape(-1)[:req.prompt_len])
 
 
 class ExecutionBackend:
@@ -52,6 +61,15 @@ class ExecutionBackend:
     def register(self, req: Request,
                  on_token: Optional[TokenCallback] = None) -> None:
         pass
+
+    def prefix_hit(self, req: Request) -> int:
+        """Longest reusable cached-prefix length for this request's prompt.
+
+        Consulted by the scheduler at ARRIVAL (before prefill kernels are
+        built), so a hit shrinks the request's prefill ETC and every
+        downstream estimate — piggyback horizons, HEG kernel timing — sees
+        only the real remaining tail.  0 = cold prefill."""
+        return 0
 
     def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
                       now: float) -> None:
@@ -92,9 +110,74 @@ class ExecutionBackend:
 
 
 class SimBackend(ExecutionBackend):
-    """Timing-only backend: the discrete-event simulator is the execution."""
+    """Timing-only backend: the discrete-event simulator is the execution.
+
+    It still models shared-prefix hit accounting (DESIGN.md §10) with the
+    SAME radix index, driven at the SAME scheduler instants as the real
+    backend — match at arrival, insert at prefill completion, pin while in
+    flight — so sim and real traces stay equal with the cache on or off.
+    ``max_len`` mirrors the real backend's ring capacity (its wrap gate:
+    a donor whose row could wrap past ``max_len`` is never indexed, since
+    wrap would overwrite the donated prefix); ``None`` leaves insertion
+    ungated for pure-sim studies."""
 
     name = "sim"
+
+    def __init__(self, *, prefix_cache: bool = True,
+                 prefix_cache_tokens: Optional[int] = None,
+                 prefix_block: int = 1, max_len: Optional[int] = None):
+        from repro.core.prefixcache import DEFAULT_CAPACITY_TOKENS
+        self._prefix: Optional[PrefixCache] = PrefixCache(
+            prefix_cache_tokens or DEFAULT_CAPACITY_TOKENS,
+            block=prefix_block) if prefix_cache else None
+        self.max_len = max_len
+        self._hit_node: Dict[int, object] = {}
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_prompt_tokens = 0
+
+    def prefix_hit(self, req: Request) -> int:
+        if self._prefix is None or req.tokens is None:
+            return 0
+        self.prefix_prompt_tokens += req.prompt_len
+        hit, node = self._prefix.match(_prompt_key(req),
+                                       max_hit=req.prompt_len - 1)
+        if hit <= 0 or node is None:
+            return 0
+        old = self._hit_node.pop(req.id, None)
+        if old is not None:  # re-arrival of the same id: drop the stale pin
+            self._prefix.unpin(old)
+        self._prefix.pin(node)
+        self._hit_node[req.id] = node
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += hit
+        return hit
+
+    def prefill_done(self, req: Request, now: float) -> None:
+        if self._prefix is None or req.tokens is None:
+            return
+        if self.max_len is not None \
+                and req.prompt_len + req.max_new_tokens > self.max_len:
+            return  # wrap gate (mirrors JaxRealBackend)
+        self._prefix.insert(_prompt_key(req))
+
+    def finish(self, req: Request, now: float) -> None:
+        node = self._hit_node.pop(req.id, None)
+        if node is not None and self._prefix is not None:
+            self._prefix.unpin(node)
+
+    def release(self, reqs: List[Request], now: float) -> None:
+        for r in reqs:
+            self.finish(r, now)
+
+    def stats(self) -> dict:
+        out = {"prefix_hits": self.prefix_hits,
+               "prefix_hit_tokens": self.prefix_hit_tokens,
+               "prefix_hit_rate": self.prefix_hit_tokens
+               / max(self.prefix_prompt_tokens, 1)}
+        if self._prefix is not None:
+            out.update(self._prefix.stats())
+        return out
 
 
 def _pow2_buckets(n: int) -> List[int]:
@@ -156,17 +239,29 @@ class JaxRealBackend(ExecutionBackend):
 
     name = "jax"
 
+    _ENC_DEC_MSG = (
+        "JaxRealBackend cannot serve encoder-decoder configs: slot rebinding "
+        "invalidates a pool row with kvcache.reset_row, which deliberately "
+        "leaves enc_out / cross-attention state untouched — a rebound slot "
+        "would silently serve the PREVIOUS occupant's encoder output as its "
+        "cross-attention context")
+
     def __init__(self, cfg, params, *, pool_slots: int, max_len: int = 512,
                  dtype=None, device_resident: bool = True,
                  in_pool_prefill: Optional[bool] = None,
                  abortable_runs: bool = True,
                  decode_segment_steps: int = 8,
-                 elastic_decode: bool = True):
+                 elastic_decode: bool = True,
+                 prefix_cache: bool = True,
+                 prefix_cache_tokens: Optional[int] = None,
+                 prefix_block: int = 1):
         import jax
         import jax.numpy as jnp
         import numpy as np
         from repro.models import init_cache
-        if cfg.is_encoder_decoder or cfg.frontend != "none":
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(self._ENC_DEC_MSG)
+        if cfg.frontend != "none":
             raise NotImplementedError(
                 "JaxRealBackend serves text-only decoders")
         self._jax, self._jnp, self._np = jax, jnp, np
@@ -269,6 +364,35 @@ class JaxRealBackend(ExecutionBackend):
         self.decode_rows = 0
         self.decode_kv_limit = 0
         self.kv_bytes_decode = 0
+        # shared-prefix KV reuse (DESIGN.md §10): a host-side radix index
+        # over prompt token IDs; a hit replaces the matched prefix's forward
+        # passes with ONE bounded row-to-row KV copy.  Only exact for
+        # never-wrapping pure-attention rings, and it leans on in-pool
+        # prefill (the copy IS an in-pool row write), so unsupported
+        # configs and legacy modes silently fall back to cold prefill.
+        from repro.core.prefixcache import DEFAULT_CAPACITY_TOKENS
+        self._prefix: Optional[PrefixCache] = None
+        if prefix_cache and self.in_pool_prefill and self.device_resident \
+                and prefix_reuse_supported(cfg, max_len):
+            self._prefix = PrefixCache(
+                prefix_cache_tokens or DEFAULT_CAPACITY_TOKENS,
+                block=prefix_block)
+        self._hit: Dict[int, int] = {}  # req id -> matched prefix length
+        self._hit_node: Dict[int, object] = {}  # req id -> pinned radix node
+        # physical prefix sources: nodes backed by a live/free pool row
+        # (slot -> node set), and the refcounted off-pool snapshot store for
+        # prefixes whose donor slot was rebound (entry id -> entry)
+        self._slot_nodes: Dict[int, set] = {}
+        self._store: Dict[int, dict] = {}
+        self._store_next = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_prompt_tokens = 0
+        self.prefix_copy_device_calls = 0  # row/store -> row prefix copies
+        self.prefix_promotions = 0  # donor-slot rebinds snapshotted to store
+        self.prefix_fallbacks = 0  # hits served by forward passes (no source)
+        self.kv_bytes_prefix_copied = 0  # KV bytes moved by prefix copies
+        self.prefill_forward_tokens = 0  # tokens that ran a real forward
 
     # -- jitted callable cache (compilation count is O(log max_len)) --------
     def _jitted(self, key: tuple, build, donate=()):
@@ -426,6 +550,49 @@ class JaxRealBackend(ExecutionBackend):
         return self._jitted(("prefill_chunk", pool_size, sizes, tok_len,
                              kv_limit, fresh, emit), build, donate=(1, 2))
 
+    def _prefix_copy_fn(self, pool_size: int, hit_cap: int):
+        """Row-to-row shared-prefix copy (DESIGN.md §10): donor row ->
+        freshly reset consumer row, bounded to the pow-2 ``hit_cap`` bucket
+        with the traced ``hit`` masking the overhang.  Jit keys are
+        ``(pool, hit_cap)`` — O(log max_len) programs, never one per hit."""
+        from repro.models import copy_prefix_rows
+        max_len = self.max_len
+
+        def build():
+            def fn(pool, src, dst, hit):
+                return copy_prefix_rows(pool, src, dst, hit, hit_cap,
+                                        max_len)
+            return fn
+        return self._jitted(("prefix_copy", pool_size, hit_cap), build,
+                            donate=(0,))
+
+    def _prefix_paste_fn(self, pool_size: int, entry_cap: int, hit_cap: int):
+        """Store-entry -> consumer-row twin of :meth:`_prefix_copy_fn` (the
+        entry is NOT donated: it is shared by every future consumer)."""
+        from repro.models import paste_prefix
+        max_len = self.max_len
+
+        def build():
+            def fn(pool, entry, dst, hit):
+                return paste_prefix(pool, entry, dst, hit, hit_cap,
+                                    entry_cap, max_len)
+            return fn
+        return self._jitted(("prefix_paste", pool_size, entry_cap, hit_cap),
+                            build, donate=(0,))
+
+    def _prefix_snap_fn(self, pool_size: int, depth_cap: int):
+        """Donor-row snapshot at slot-rebind time.  The pool is NOT donated
+        (it must survive — the snapshot is a read), so this is the one
+        prefix program that pays a bounded O(depth_cap) copy by design."""
+        from repro.models import snapshot_prefix
+        max_len = self.max_len
+
+        def build():
+            def fn(pool, src):
+                return snapshot_prefix(pool, src, depth_cap, max_len)
+            return fn
+        return self._jitted(("prefix_snap", pool_size, depth_cap), build)
+
     def _clear_fn(self, pool_size: int):
         def build():
             def fn(toks, mask, slot):
@@ -462,12 +629,67 @@ class JaxRealBackend(ExecutionBackend):
         """Bind the LOWEST free slot (min-heap): live rows stay compacted at
         the front of the pool, so the elastic row bound
         (``next_pow2(high_water + 1)``, DESIGN.md §9) tracks occupancy
-        instead of allocation history."""
+        instead of allocation history.  If the popped row still backs radix
+        prefixes, they are promoted to the store FIRST — the row's buffers
+        are about to be reused (DESIGN.md §10)."""
         if not self._free:
             self._grow_pool()
         slot = heapq.heappop(self._free)
+        self._promote_donor(slot)
         self._slot[rid] = slot
         return slot
+
+    # -- shared-prefix sources (DESIGN.md §10) --------------------------------
+    def _set_source(self, node, src) -> None:
+        """Re-point a radix node's physical KV source, keeping the reverse
+        maps (slot -> nodes, store refcounts) consistent.  A store entry
+        whose last referencing node departs is freed — its device buffers
+        have no other owner."""
+        old = node.source
+        if old == src:
+            return
+        if old is not None:
+            kind, ref = old
+            if kind == "slot":
+                nodes = self._slot_nodes.get(ref)
+                if nodes is not None:
+                    nodes.discard(node)
+                    if not nodes:
+                        del self._slot_nodes[ref]
+            else:
+                entry = self._store.get(ref)
+                if entry is not None:
+                    entry["refs"] -= 1
+                    if entry["refs"] <= 0:
+                        del self._store[ref]
+        node.source = src
+        if src is not None:
+            kind, ref = src
+            if kind == "slot":
+                self._slot_nodes.setdefault(ref, set()).add(node)
+            else:
+                self._store[ref]["refs"] += 1
+
+    def _promote_donor(self, slot: int) -> None:
+        """A free slot that still backs indexed prefixes is being rebound:
+        snapshot the deepest donated prefix into a refcounted store entry
+        (ONE bounded device gather) and re-point every backed node at it.
+        Promotion never drops an indexed prefix — the index stays a pure
+        function of the insert/evict sequence, which is what keeps sim and
+        real traces equal (the sim side has no promotions at all)."""
+        nodes = self._slot_nodes.get(slot)
+        if not nodes:
+            return
+        depth_cap = _next_pow2(max(n.depth for n in nodes))
+        fn = self._prefix_snap_fn(self.pool_slots, depth_cap)
+        entry_cache = fn(self._pool, self._jnp.int32(slot))
+        eid = self._store_next
+        self._store_next += 1
+        self._store[eid] = {"cache": entry_cache, "cap": depth_cap,
+                            "refs": 0}
+        self.prefix_promotions += 1
+        for n in list(nodes):
+            self._set_source(n, ("store", eid))
 
     def _sync_mask(self, slots: List[int]):
         """Push the iteration's membership to the device mask as a (usually
@@ -519,6 +741,7 @@ class JaxRealBackend(ExecutionBackend):
             pos += size
         self._scratch_pos[rid] = pos
         self.kv_bytes_prefill += n * self._kv_token_bytes
+        self.prefill_forward_tokens += n
         if pos >= req.prompt_len:  # last chunk -> first output token
             self._first[rid] = int(nxt)
             self.host_syncs += 1
@@ -539,12 +762,75 @@ class JaxRealBackend(ExecutionBackend):
             buf = self._tok_dev[rid] = self._jnp.asarray(pad)
         return buf
 
+    def prefix_hit(self, req: Request) -> int:
+        """Scheduler hook (arrival time): longest indexed prefix of the
+        prompt, matched on exact token IDs and pinned until the request
+        retires.  The matched prefix is served by ONE KV copy at the first
+        prefill chunk (``_copy_prefix``); prefill kernels/ETC cover only
+        the tail from ``seq_start = hit``.  Capped at ``prompt_len - 1``:
+        at least one forward must run to produce the first output token."""
+        if self._prefix is None or req.tokens is None:
+            return 0
+        self.prefix_prompt_tokens += req.prompt_len
+        hit, node = self._prefix.match(_prompt_key(req),
+                                       max_hit=req.prompt_len - 1)
+        if hit <= 0 or node is None:
+            return 0
+        old = self._hit_node.pop(req.id, None)
+        if old is not None:  # re-arrival of the same id: drop the stale pin
+            self._prefix.unpin(old)
+        self._prefix.pin(node)
+        self._hit[req.id] = hit
+        self._hit_node[req.id] = node
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += hit
+        return hit
+
+    def _copy_prefix(self, req: Request, hit: int) -> int:
+        """Serve a matched prefix into the request's freshly-bound row as
+        one bounded KV copy; resolves the pinned node's physical source AT
+        COPY TIME (the donor may have been promoted slot -> store since the
+        match).  Returns the row position reached — 0 means no resolvable
+        source (defensive; the caller falls back to forward passes, so a
+        hit can slow down but never change tokens)."""
+        node = self._hit_node.get(req.id)
+        src = getattr(node, "source", None)
+        if src is None:
+            self.prefix_fallbacks += 1
+            return 0
+        jnp = self._jnp
+        dst = self._slot[req.id]
+        hit_cap = _next_pow2(hit)
+        kind, ref = src
+        if kind == "slot":
+            if ref == dst:  # can't happen (promotion precedes rebinding)
+                self.prefix_fallbacks += 1
+                return 0
+            fn = self._prefix_copy_fn(self.pool_slots, hit_cap)
+            self._pool = fn(self._pool, jnp.int32(ref), jnp.int32(dst),
+                            jnp.int32(hit))
+        else:
+            entry = self._store.get(ref)
+            if entry is None:
+                self.prefix_fallbacks += 1
+                return 0
+            fn = self._prefix_paste_fn(self.pool_slots, entry["cap"],
+                                       min(hit_cap, entry["cap"]))
+            self._pool = fn(self._pool, entry["cache"], jnp.int32(dst),
+                            jnp.int32(hit))
+        self.prefix_copy_device_calls += 1
+        self.kv_bytes_prefix_copied += hit_cap * self._kv_token_bytes
+        self._row_pos[req.id] = hit
+        return hit
+
     def _ensure_row_at(self, req: Request, seq_start: int):
         """Pool row positioned at ``seq_start``: the slot is allocated at
         prefill START and its reused row invalidated by the next chunk's
-        ``fresh`` program; a discard-style preemption that reset the
+        ``fresh`` program; a matched prefix is copied in (never forwarded)
+        before any tail runs; a discard-style preemption that reset the
         scheduler's chunk progress re-invalidates the row and replays the
-        already-prefetched prefix."""
+        already-prefetched prefix — re-copying the prefix too (the pinned
+        node guarantees the source still exists)."""
         rid = req.id
         if rid in self._slot and self._row_pos.get(rid) == seq_start:
             return
@@ -552,8 +838,12 @@ class JaxRealBackend(ExecutionBackend):
             self._alloc_slot(rid)
         self._row_pos[rid] = None  # sentinel: next bucket resets the row
         self._nxt_dev.pop(rid, None)
-        if seq_start > 0:
-            self._run_bucketed_in_pool(req, 0, seq_start)
+        done = 0
+        hit = min(self._hit.get(rid, 0), seq_start)
+        if hit > 0:
+            done = self._copy_prefix(req, hit)
+        if seq_start > done:
+            self._run_bucketed_in_pool(req, done, seq_start - done)
 
     def _run_bucketed_in_pool(self, req: Request, start: int, n: int):
         if n <= 0:  # zero-length chunk: nothing ran, nothing to dispatch
@@ -581,6 +871,7 @@ class JaxRealBackend(ExecutionBackend):
             fresh = False
         self._row_pos[rid] = pos
         self.kv_bytes_prefill += n * self._kv_token_bytes
+        self.prefill_forward_tokens += n
         if pos >= req.prompt_len:
             # keep the first output token on device: ONE host sync per
             # request happens at prefill_done, not per chunk
@@ -588,6 +879,11 @@ class JaxRealBackend(ExecutionBackend):
 
     def register(self, req: Request,
                  on_token: Optional[TokenCallback] = None) -> None:
+        if self.cfg.is_encoder_decoder:
+            # guarded again here (not just in __init__) so a subclass or a
+            # future constructor relaxation can never reach the slot pool
+            # with cross-attention state reset_row won't invalidate
+            raise NotImplementedError(self._ENC_DEC_MSG)
         if on_token is not None:
             self._on_token[req.id] = on_token
         if self.in_pool_prefill and req.tokens is not None:
@@ -643,6 +939,18 @@ class JaxRealBackend(ExecutionBackend):
         # host-known row progress: decode dispatches derive their static
         # pow-2 kv_limit from the max live position of the batch (§9)
         self._slot_pos[self._slot[rid]] = req.prompt_len
+        # index the finished prompt as a donor (DESIGN.md §10) — but only
+        # when the row can NEVER ring-wrap (wrap would overwrite the donated
+        # prefix).  The gate is static per request, so sim models it too.
+        if self._prefix is not None and req.tokens is not None \
+                and rid in self._slot \
+                and req.prompt_len + req.max_new_tokens <= self.max_len:
+            path, evicted = self._prefix.insert(_prompt_key(req))
+            slot = self._slot[rid]
+            for n in path:
+                self._set_source(n, ("slot", slot))
+            for n in evicted:
+                self._set_source(n, None)
         self._last[rid] = first
         self._texts[rid] = [first]
         self._emit(req, first)
@@ -823,6 +1131,13 @@ class JaxRealBackend(ExecutionBackend):
         self._tok_dev.pop(req.id, None)
         self._row_pos.pop(req.id, None)
         self._nxt_dev.pop(req.id, None)
+        # release the consumer's prefix pin; the request's OWN donated
+        # prefix (if indexed at prefill_done) outlives it — the freed row
+        # keeps its KV until rebinding promotes the prefix to the store
+        self._hit.pop(req.id, None)
+        node = self._hit_node.pop(req.id, None)
+        if node is not None and self._prefix is not None:
+            self._prefix.unpin(node)
 
     def release(self, reqs: List[Request], now: float) -> None:
         """Free resources of requests cut off mid-flight (simulation hit
@@ -859,4 +1174,16 @@ class JaxRealBackend(ExecutionBackend):
                 "decode_rows": self.decode_rows,
                 "decode_kv_limit": self.decode_kv_limit,
                 "kv_bytes_decode": self.kv_bytes_decode,
-                "pool_slots": self.pool_slots}
+                "pool_slots": self.pool_slots,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_hit_rate": self.prefix_hit_tokens
+                / max(self.prefix_prompt_tokens, 1),
+                "kv_bytes_prefix_copied": self.kv_bytes_prefix_copied,
+                "prefix_copy_device_calls": self.prefix_copy_device_calls,
+                "prefix_promotions": self.prefix_promotions,
+                "prefix_fallbacks": self.prefix_fallbacks,
+                "prefix_store_entries": len(self._store),
+                "prefill_forward_tokens": self.prefill_forward_tokens,
+                **(self._prefix.stats() if self._prefix is not None
+                   else {})}

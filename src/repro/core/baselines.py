@@ -12,7 +12,6 @@ from collections import deque
 from typing import List, Optional
 
 from repro.core.heg import HEG
-from repro.core.preemption import ReqContext
 from repro.core.requests import Priority, ReqState, Request
 from repro.core.scheduler import RunningKernel, SchedulerBase
 
@@ -29,7 +28,7 @@ class FCFSScheduler(SchedulerBase):
         self.fifo: deque = deque()
 
     def on_arrival(self, req: Request, now: float):
-        c = ReqContext.build(req, self.heg)
+        c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
         self.fifo.append(req.id)
@@ -139,7 +138,7 @@ class ContinuousBatchingScheduler(SchedulerBase):
         self.wait: deque = deque()
 
     def on_arrival(self, req: Request, now: float):
-        c = ReqContext.build(req, self.heg)
+        c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
         self.wait.append(req.id)

@@ -102,6 +102,8 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  in_pool_prefill: Optional[bool] = None,
                  abortable_runs: bool = True, decode_segment_steps: int = 8,
                  elastic_decode: bool = True,
+                 prefix_cache: bool = True,
+                 prefix_cache_tokens: Optional[int] = None,
                  **sched_kw):
         # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
         # the scheduler's plan-truncation arithmetic must mirror the
@@ -117,7 +119,11 @@ class RealAgentXPUEngine(AgentXPUEngine):
             max_len=max_len, dtype=dtype, device_resident=device_resident,
             in_pool_prefill=in_pool_prefill, abortable_runs=abortable_runs,
             decode_segment_steps=decode_segment_steps,
-            elastic_decode=elastic_decode)
+            elastic_decode=elastic_decode,
+            # shared-prefix KV reuse (DESIGN.md §10); prefix_cache=False is
+            # the cold-prefill baseline (--no-prefix-cache)
+            prefix_cache=prefix_cache,
+            prefix_cache_tokens=prefix_cache_tokens)
         self._pending: List[Request] = []
         self._live: List[Request] = []  # everything owned by the active run
 

@@ -30,8 +30,14 @@ class ReqContext:
 
     # -- construction --------------------------------------------------------
     @classmethod
-    def build(cls, req: Request, heg: HEG) -> "ReqContext":
-        flat = heg.prefill_kernels(req.id, req.prompt_len)
+    def build(cls, req: Request, heg: HEG,
+              start_tok: int = 0) -> "ReqContext":
+        """``start_tok > 0`` (a shared-prefix cache hit, DESIGN.md §10)
+        builds kernels for the tail ``[start_tok, prompt_len)`` only;
+        chunks before the hit boundary stay as empty (trivially complete)
+        entries so chunk indices remain absolute."""
+        flat = heg.prefill_kernels(req.id, req.prompt_len,
+                                   start_tok=start_tok)
         chunks: List[List[HEGNode]] = []
         for n in flat:
             while len(chunks) <= n.chunk_idx:
@@ -63,8 +69,12 @@ class ReqContext:
             i = self.progress[j]
             if i >= len(ck) or j in self.inflight:
                 continue
-            if j > 0 and self.progress[j - 1] <= i:
-                continue  # KV-order: chunk j must stay strictly behind j-1
+            if j > 0 and self.chunk_kernels[j - 1] \
+                    and self.progress[j - 1] <= i:
+                # KV-order: chunk j must stay strictly behind j-1 (an EMPTY
+                # predecessor — before a prefix-cache hit boundary — is
+                # trivially complete and never gates its successor)
+                continue
             out.append(ck[i])
             active += 1
             if active >= max_parallel_chunks:

@@ -48,6 +48,7 @@ class Request:
     prefill_progress: int = 0  # tokens prefilled so far (chunk granularity)
     preempt_count: int = 0
     recomputed_tokens: int = 0  # discarded prefill work (scheme (a))
+    prefix_hit: int = 0  # prompt tokens served from the prefix cache (§10)
     last_enqueue_t: float = 0.0
 
     @property

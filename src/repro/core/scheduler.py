@@ -85,8 +85,17 @@ class SchedulerBase:
         self._fused_plan: Optional[dict] = None
 
     # -- request lifecycle ---------------------------------------------------
+    def _build_ctx(self, req: Request) -> ReqContext:
+        """Prefill context consulting the backend's shared-prefix index
+        (DESIGN.md §10): a cache hit means kernels — and with them the
+        prefill ETC, piggyback horizons and HEG timing — cover only the
+        tail from ``seq_start = hit``; the matched prefix is served by one
+        KV copy on the execution side, not by forward passes."""
+        req.prefix_hit = self.backend.prefix_hit(req)
+        return ReqContext.build(req, self.heg, start_tok=req.prefix_hit)
+
     def on_arrival(self, req: Request, now: float):
-        c = ReqContext.build(req, self.heg)
+        c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
         req.last_enqueue_t = now

@@ -56,6 +56,11 @@ class SimMetrics:
             "recomputed_tokens": sum(r.recomputed_tokens
                                      for r in self.completed),
             "preemptions": sum(r.preempt_count for r in self.completed),
+            # shared-prefix KV reuse (DESIGN.md §10): prompt tokens served
+            # by a cache copy instead of prefill forward passes
+            "prefix_hit_tokens": sum(r.prefix_hit for r in self.completed),
+            "prefix_hit_rate": sum(r.prefix_hit for r in self.completed)
+                / max(sum(r.prompt_len for r in self.completed), 1),
         }
 
 

@@ -66,6 +66,16 @@ def main(argv=None):
                          "pool_slots x max_len cache instead of the pow-2 "
                          "live-row / live-prefix bounds (the full-pool "
                          "baseline of BENCH_decode.json's scaling sweep)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV reuse: every prompt "
+                         "prefills cold even when its prefix is already "
+                         "resident (the baseline of BENCH_prefill.json's "
+                         "prefix_reuse entry)")
+    ap.add_argument("--system-prompt-len", type=int, default=32,
+                    help="with --real: shared system-prompt tokens "
+                         "prepended to every prompt (agentic flows share "
+                         "system prompts / tool schemas — the traffic shape "
+                         "the prefix cache exists for; 0 disables)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -83,10 +93,18 @@ def main(argv=None):
         cfg = get_tiny_config(args.arch)
         params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
         rng = np.random.default_rng(args.seed)
+        # agentic traffic shape: every flow shares the same leading system
+        # prompt, so all but the first prefill can start at the hit boundary
+        sys_len = max(args.system_prompt_len, 0)
+        sys_toks = rng.integers(0, cfg.vocab_size, (1, sys_len)) \
+            if sys_len else None
         for r in reqs:
             r.prompt_len = min(r.prompt_len, 96)
             r.max_new_tokens = min(r.max_new_tokens, 16)
-            r.tokens = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
+            tail = rng.integers(0, cfg.vocab_size, (1, r.prompt_len))
+            r.tokens = tail if sys_toks is None else \
+                np.concatenate([sys_toks, tail], axis=1)
+            r.prompt_len = r.tokens.shape[1]
         eng = RealAgentXPUEngine(
             cfg, params, scheduler=args.scheduler, max_len=256,
             pool_slots=args.pool_slots,
@@ -97,7 +115,8 @@ def main(argv=None):
             # None follows device_resident (in-pool prefill leans on
             # donation; --no-device-resident restores the full legacy flow)
             in_pool_prefill=False if args.no_in_pool_prefill else None,
-            elastic_decode=not args.no_elastic_decode)
+            elastic_decode=not args.no_elastic_decode,
+            prefix_cache=not args.no_prefix_cache)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -122,12 +141,22 @@ def main(argv=None):
                   f"calls, {st['prefill_host_syncs']} host syncs, "
                   f"{st['bind_device_calls']} bind scatters, "
                   f"{st['kv_bytes_prefill']} KV bytes written")
+            print(f"[real] prefix cache: {st['prefix_hits']} hit prefills, "
+                  f"{st['prefix_hit_tokens']} prompt tokens copied not "
+                  f"recomputed (hit rate {st['prefix_hit_rate']:.2f}), "
+                  f"{st['kv_bytes_prefix_copied']} KV bytes copied, "
+                  f"{st['prefix_store_entries']} store entries, "
+                  f"{st['prefix_promotions']} donor promotions")
     else:
+        from repro.core.backend import SimBackend
         cfg = get_config(args.arch)
         eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],
                              scheduler=args.scheduler,
                              abortable_runs=not args.no_abortable_runs,
                              decode_segment_steps=args.decode_segment_steps)
+        # sim traces carry no token ids, so hits only arise when a caller
+        # fills them in — the knob still gates the modeled accounting
+        eng.backend = SimBackend(prefix_cache=not args.no_prefix_cache)
         metrics = eng.run_trace(reqs)
 
     s = metrics.summary()

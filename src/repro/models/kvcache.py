@@ -288,6 +288,76 @@ def reset_row(pool, slot):
     return out
 
 
+def _mask_prefix_view(one, hit, cap):
+    """Clamp a batch-1 ring view to exactly its first ``hit`` positions:
+    ``slot_pos`` entries at and beyond ``hit`` flip to -1 (empty — attention
+    masks them out even though the K/V payload still holds donor bytes, the
+    same copy-on-write trick ``reset_row`` plays on a whole row) and ``pos``
+    becomes ``hit``.  ``hit`` may be traced; ``cap`` is the view's static
+    ring alloc (``hit <= cap``)."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    live = jnp.arange(cap) < hit
+
+    def fix(path, x):
+        name = path[-1].key if isinstance(path[-1], DictKey) else ""
+        if name == "slot_pos":
+            return jnp.where(live, x, -1)
+        return x
+
+    out = dict(one)
+    for key in ("head", "tail"):
+        out[key] = tree_map_with_path(fix, one[key])
+    out["blocks"] = tree_map_with_path(fix, one["blocks"])
+    out["pos"] = jnp.zeros_like(one["pos"]) + jnp.int32(hit)
+    return out
+
+
+def copy_prefix_rows(pool, src, dst, hit, hit_cap, full):
+    """Shared-prefix KV reuse, row-to-row (DESIGN.md §10): gather ring
+    positions ``[0, hit)`` of donor row ``src`` into a freshly
+    ``reset_row``-ed row ``dst``, leaving ``dst`` exactly as if tokens
+    ``[0, hit)`` had been prefilled into it — O(hit · KV-copy) instead of
+    O(hit · forward).
+
+    ``hit_cap`` is the static pow-2 bucket covering ``hit`` (bounds the jit
+    key space to O(log max_len) shapes); the traced ``hit`` masks the
+    ``[hit, hit_cap)`` overhang — donor ring slots whose K/V ride along but
+    whose ``slot_pos`` is flipped to -1, so they are invisible to attention
+    and simply overwritten by the consumer's tail prefill.  Exact only for
+    never-wrapping pure-attention rings (``prefixcache.prefix_reuse_
+    supported``); ``src``/``dst``/``hit`` may be traced, ``src != dst``.
+    Under jit with the pool donated this is a bounded row gather + row
+    scatter — no forward pass, no full-ring traffic."""
+    pool = reset_row(pool, dst)
+    eff = min(hit_cap, full) if full else hit_cap
+    view = truncate_rings(read_row(pool, src), eff, full)
+    view = _mask_prefix_view(view, hit, eff)
+    return write_row_slice(pool, view, dst, 0, eff)
+
+
+def snapshot_prefix(pool, src, depth_cap, full):
+    """Detach the leading ``depth_cap`` ring slots of row ``src`` as an
+    immutable batch-1 prefix entry (the refcounted shared-prefix store,
+    DESIGN.md §10): taken at slot-rebind time, the instant a donor row's
+    buffers would otherwise be reused.  NOT donated — the pool must survive
+    — and deliberately tiny: O(depth_cap) ring bytes per leaf."""
+    eff = min(depth_cap, full) if full else depth_cap
+    return truncate_rings(read_row(pool, src), eff, full)
+
+
+def paste_prefix(pool, entry, dst, hit, hit_cap, entry_alloc, full):
+    """Consume a :func:`snapshot_prefix` store entry: re-truncate it to the
+    consumer's ``hit_cap`` bucket, mask to the traced ``hit``, and scatter
+    into a freshly ``reset_row``-ed row ``dst`` — the store-sourced twin of
+    :func:`copy_prefix_rows` (``hit <= hit_cap <= entry_alloc``)."""
+    pool = reset_row(pool, dst)
+    eff = min(hit_cap, entry_alloc)
+    view = truncate_rings(entry, eff, entry_alloc)
+    view = _mask_prefix_view(view, hit, eff)
+    return write_row_slice(pool, view, dst, 0, eff)
+
+
 def copy_into_prefix(new, old, p):
     """Copy the ``p`` batch rows of pool cache ``old`` into the first ``p``
     rows of the (larger) freshly-initialized pool ``new`` (pool doubling).
