@@ -28,6 +28,12 @@ import sys
 #   higher: fail if fresh < min(committed, cap) * (1 - threshold)
 #   lower_inverse (metric is 1/latency): fail if
 #       fresh < min(committed, cap) / (1 + threshold)
+#   lower (metric is a cost ratio, smaller is better): fail if
+#       fresh > max(committed, cap) * (1 + threshold) — here the cap is the
+#       acceptance CEILING, and a committed value below it (headroom) does
+#       not tighten the gate
+#   flag (metric is a boolean property): fail unless fresh is truthy;
+#       threshold/cap unused
 # The cap encodes the metric's ACCEPTANCE floor: a committed value above it
 # (dev-machine headroom on a wall-clock-sensitive metric) does not tighten
 # the gate, so a slower/noisier CI runner that still clears the acceptance
@@ -52,6 +58,20 @@ CHECKS = [
     ("BENCH_reactive.json", "ttft_reduction", "lower_inverse", 0.25, 10.0),
     ("BENCH_reactive.json", "proactive_throughput_ratio", "higher",
      0.15, 0.6),
+    # quantized KV hot path (DESIGN.md §11): within-run int8/bf16 ratios
+    # from the fused-decode runs.  Bytes must shrink past the 0.60x
+    # acceptance ceiling; quantization must not cost extra dispatches on
+    # the decode hot path (>10% device-call growth reds).
+    ("BENCH_decode.json", "int8.kv_bytes_per_token_ratio", "lower",
+     0.0, 0.60),
+    ("BENCH_decode.json", "int8.device_calls_per_token_ratio", "lower",
+     0.0, 1.10),
+    # capacity headline at the deployment shape (llama3.2-3b, bf16
+    # payload): >= 1.8x pool slots at an equal byte budget
+    ("BENCH_decode.json", "int8.pool_slots_ratio", "higher", 0.0, 1.8),
+    # Pallas kernel routing must keep serving token-exact vs the XLA
+    # reference (interpret-mode smoke on CPU runners)
+    ("BENCH_decode.json", "pallas_parity.token_exact", "flag", 0.0, 1.0),
 ]
 
 
@@ -100,12 +120,22 @@ def compare(baseline_dir: str, fresh_dir: str) -> int:
         if fresh is None or not isinstance(fresh, (int, float)):
             failures.append(f"{fname}:{path}: metric missing in fresh run")
             continue
-        gate_base = min(base, cap)
-        if direction == "higher":
+        if direction == "flag":
+            ok = bool(fresh)
+            verdict = "need true"
+        elif direction == "lower":
+            # cost ratio, smaller is better: the cap is the acceptance
+            # ceiling, committed headroom below it does not tighten
+            gate_base = max(base, cap)
+            ok = fresh <= gate_base * (1.0 + thr)
+            verdict = f"need <= {gate_base * (1.0 + thr):.3f}"
+        elif direction == "higher":
+            gate_base = min(base, cap)
             ok = fresh >= gate_base * (1.0 - thr)
             verdict = f"need >= {gate_base * (1.0 - thr):.3f}"
         else:  # lower_inverse: metric is 1/latency, so a drop IS the
             # latency increase the threshold bounds
+            gate_base = min(base, cap)
             ok = fresh >= gate_base / (1.0 + thr)
             verdict = f"need >= {gate_base / (1.0 + thr):.3f}"
         rows.append((fname, path, base, fresh,

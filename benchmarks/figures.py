@@ -309,7 +309,8 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
             tokens=rng.integers(0, cfg.vocab_size, (1, plen)))
             for i in range(n_req)]
 
-    def run_mode(max_fused, device_resident=True):
+    def run_mode(max_fused, device_resident=True, kv_dtype="bf16",
+                 kernel_backend="xla"):
         # pool right-sized to the batch (same for every mode): the masked
         # decode computes all pool rows, so idle slots only add noise here.
         # legacy also pre-dates in-pool prefill, so it runs scratch+bind
@@ -317,7 +318,9 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
         eng = RealAgentXPUEngine(cfg, params, max_len=128,
                                  pool_slots=n_req,
                                  max_fused_steps=max_fused,
-                                 device_resident=device_resident)
+                                 device_resident=device_resident,
+                                 kv_dtype=kv_dtype,
+                                 kernel_backend=kernel_backend)
         eng.serve(mk_reqs(0))  # warm-up: compiles every shape the run needs
         best = None
         for rep in range(reps):  # best-of-reps: wall-clock noise, not a sweep
@@ -329,6 +332,8 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
             decode_tokens = sum(r.decoded - 1 for r in m.completed)
             row = {
                 "max_fused_steps": max_fused,
+                "kv_dtype": kv_dtype,
+                "kernel_backend": kernel_backend,
                 "decode_tokens": decode_tokens,
                 "wall_s": wall,
                 "tokens_per_s": decode_tokens / max(wall, 1e-9),
@@ -337,6 +342,9 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
                     / max(decode_tokens, 1),
                 "host_syncs_per_token":
                     (s1["host_syncs"] - s0["host_syncs"])
+                    / max(decode_tokens, 1),
+                "kv_bytes_per_token":
+                    (s1["kv_bytes_decode"] - s0["kv_bytes_decode"])
                     / max(decode_tokens, 1),
                 "fused_steps": s1["fused_steps"] - s0["fused_steps"],
                 "jit_compilations": s1["jit_compilations"],
@@ -352,7 +360,61 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
     fused = run_mode(32)
     fused["mode"] = "fused"
     speedup = fused["tokens_per_s"] / max(legacy["tokens_per_s"], 1e-9)
-    rows = [legacy, per_step, fused]
+
+    # -- quantized KV hot path (DESIGN.md §11): int8 vs bf16, within-run -----
+    # Both sides measured in this process on the same trace, so the ratios
+    # transfer across runner hardware (the check_regression contract).
+    int8_fused = run_mode(32, kv_dtype="int8")
+    int8_fused["mode"] = "fused_int8"
+    int8_metrics = {
+        "kv_bytes_per_token_ratio": int8_fused["kv_bytes_per_token"]
+        / max(fused["kv_bytes_per_token"], 1e-9),
+        "device_calls_per_token_ratio": int8_fused["device_calls_per_token"]
+        / max(fused["device_calls_per_token"], 1e-9),
+        "tokens_per_s_ratio": int8_fused["tokens_per_s"]
+        / max(fused["tokens_per_s"], 1e-9),
+    }
+    # capacity headline at the DEPLOYMENT shape (the paper's eval model,
+    # bf16 payload): slots per byte budget = bf16-slot bytes / int8-slot
+    # bytes.  Shape-only accounting (jax.eval_shape — nothing allocated);
+    # the tiny f32 bench config would understate the win (head_dim 32 vs
+    # 128 amortizes the f32 scale overhead 4x worse).
+    from repro.models import cache_bytes, init_cache
+    dep = get_config("llama3.2-3b")
+
+    def slot_bytes(kvd):
+        return cache_bytes(jax.eval_shape(
+            lambda: init_cache(dep, None, 1, 1024, jnp.bfloat16,
+                               kv_dtype=kvd)))
+
+    int8_metrics["bf16_slot_bytes"] = slot_bytes("bf16")
+    int8_metrics["int8_slot_bytes"] = slot_bytes("int8")
+    int8_metrics["pool_slots_ratio"] = (
+        int8_metrics["bf16_slot_bytes"] / int8_metrics["int8_slot_bytes"])
+
+    # -- Pallas kernel parity smoke (DESIGN.md §11): pallas must serve the
+    # identical token stream as the XLA reference.  Small on purpose: the
+    # CPU container runs the kernels under interpret=True (Python per grid
+    # step), and token-exactness, not speed, is the property gated here.
+    par_n, par_out, par_plen = 3, 8, 24
+
+    def parity_tokens(kernel_backend):
+        rng = np.random.default_rng(2)
+        reqs = [Request(
+            id=i, priority=Priority.PROACTIVE, prompt_len=par_plen,
+            max_new_tokens=par_out, arrival_time=0.0,
+            tokens=rng.integers(0, cfg.vocab_size, (1, par_plen)))
+            for i in range(par_n)]
+        eng = RealAgentXPUEngine(cfg, params, max_len=128, pool_slots=par_n,
+                                 kernel_backend=kernel_backend)
+        eng.serve(reqs)
+        return [eng.output_tokens(i) for i in range(par_n)]
+
+    pallas_parity = {
+        "token_exact": parity_tokens("pallas") == parity_tokens("xla"),
+        "n_requests": par_n, "out_tokens": par_out,
+    }
+    rows = [legacy, per_step, fused, int8_fused]
 
     # -- decode-scaling sweep: prompt length x pool occupancy ----------------
     pool = int(os.environ.get("BENCH_DECODE_SWEEP_POOL", "16"))
@@ -406,6 +468,7 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
             fp = run_cell(occ, sweep_plen, False)
             sweep_rows.append({
                 "pool_slots": pool, "live": occ, "prompt_len": sweep_plen,
+                "kv_dtype": "bf16", "kernel_backend": "xla",
                 "elastic_tokens_per_s": el["tokens_per_s"],
                 "full_tokens_per_s": fp["tokens_per_s"],
                 "ratio": el["tokens_per_s"] / max(fp["tokens_per_s"], 1e-9),
@@ -431,6 +494,11 @@ def bench_decode_throughput() -> Tuple[List[dict], float]:
            # steady state, and still wins the tail as finishers drain)
            "elastic_speedup": elastic_speedup,
            "elastic_speedup_at_full_occupancy": elastic_at_full,
+           # quantized KV hot path + Pallas kernels (DESIGN.md §11): the
+           # int8 ratios and the parity flag are gated by
+           # benchmarks/check_regression.py
+           "int8": dict(int8_metrics, fused_int8=int8_fused),
+           "pallas_parity": pallas_parity,
            "sweep": {"pool_slots": pool, "out_tokens": sweep_tokens,
                      "rows": sweep_rows}}
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")

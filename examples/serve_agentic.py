@@ -43,6 +43,15 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix KV reuse: every prompt "
                          "prefills cold (the hit-vs-cold baseline)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="KV-pool storage: int8 ring + f32 per-(slot, kv "
+                         "head) scales, dequantized inside the decode "
+                         "program (DESIGN.md §11)")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="attention kernel routing: pallas runs the "
+                         "pool-native kernels (interpret mode off-TPU), "
+                         "xla the lowered reference — identical tokens")
     ap.add_argument("--system-prompt-len", type=int, default=24,
                     help="shared system-prompt tokens prepended to every "
                          "flow's prompt (0 disables); with the prefix "
@@ -95,7 +104,9 @@ def main():
                              abortable_runs=not args.no_abortable_runs,
                              decode_segment_steps=args.decode_segment_steps,
                              elastic_decode=not args.no_elastic_decode,
-                             prefix_cache=not args.no_prefix_cache)
+                             prefix_cache=not args.no_prefix_cache,
+                             kv_dtype=args.kv_dtype,
+                             kernel_backend=args.kernel_backend)
     printer = stream_printer() if args.stream else None
     state = {"tokens": 0, "injected": False}
     # fire well inside the run even for tiny --out-tokens traces
@@ -150,6 +161,9 @@ def main():
     print(f"elastic decode      : last dispatch {st['decode_rows']}"
           f"/{st['pool_slots']} rows x kv_limit {st['decode_kv_limit']}/256 "
           f"({st['kv_bytes_decode']} KV bytes streamed)")
+    print(f"kv pool             : dtype {st['kv_dtype']}, kernel backend "
+          f"{st['kernel_backend']}, {st['quant_scale_bytes']} quant "
+          f"scale bytes")
     print(f"host syncs          : {st['host_syncs']} "
           f"(one per fused segment boundary, not per token)")
     print(f"prefill device calls: {st['prefill_device_calls']} "

@@ -254,16 +254,38 @@ class JaxRealBackend(ExecutionBackend):
                  elastic_decode: bool = True,
                  prefix_cache: bool = True,
                  prefix_cache_tokens: Optional[int] = None,
-                 prefix_block: int = 1):
+                 prefix_block: int = 1,
+                 kv_dtype: str = "bf16",
+                 kernel_backend: str = "xla"):
         import jax
         import jax.numpy as jnp
         import numpy as np
-        from repro.models import init_cache
+        from repro.models import init_cache, kv_supports_int8
         if cfg.is_encoder_decoder:
             raise NotImplementedError(self._ENC_DEC_MSG)
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "JaxRealBackend serves text-only decoders")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8': {kv_dtype}")
+        if kernel_backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'xla' or 'pallas': {kernel_backend}")
+        if kv_dtype == "int8" and not kv_supports_int8(cfg):
+            raise NotImplementedError(
+                "int8 KV quantization needs the per-(slot, kv head) k/v ring "
+                "layout; MLA configs cache a headless latent")
+        if kernel_backend == "pallas" and cfg.use_mla:
+            raise NotImplementedError(
+                "the Pallas kernels cover the standard GQA decode/prefill "
+                "path; absorbed-MLA attention has no kernel yet")
+        # kv_dtype="bf16" means UNQUANTIZED — the ring stores the cache
+        # compute dtype verbatim (the exactness baseline, DESIGN.md §11);
+        # "int8" switches the k/v ring payload to symmetric int8 with
+        # per-(slot, kv head) f32 scales.
+        self.kv_dtype = kv_dtype
+        self.kernel_backend = kernel_backend
+        self._kv_dtype_arg = "int8" if kv_dtype == "int8" else None
         self._jax, self._jnp, self._np = jax, jnp, np
         self.cfg = cfg
         self.params = params
@@ -303,7 +325,7 @@ class JaxRealBackend(ExecutionBackend):
         self.dtype = dtype or jnp.float32
         self.pool_slots = max(int(pool_slots), 1)
         self._pool = init_cache(cfg, params, self.pool_slots, max_len,
-                                self.dtype)
+                                self.dtype, kv_dtype=self._kv_dtype_arg)
         # min-heap: rebinding always takes the LOWEST free slot, so the live
         # high-water mark (and with it the elastic row bound) stays minimal
         self._free: List[int] = list(range(self.pool_slots))
@@ -328,9 +350,19 @@ class JaxRealBackend(ExecutionBackend):
 
         def _bytes(one_max_len):
             return cache_bytes(jax.eval_shape(
-                lambda: init_cache(cfg, params, 1, one_max_len, self.dtype)))
+                lambda: init_cache(cfg, params, 1, one_max_len, self.dtype,
+                                   kv_dtype=self._kv_dtype_arg)))
         self._kv_token_bytes = _bytes(1) - _bytes(0)
         self._bind_row_bytes = _bytes(max_len)
+        # quantization-scale overhead of the resident pool (payload bytes are
+        # what kv_bytes_* already count; the scales are the int8 storage tax)
+        self.quant_scale_bytes = sum(
+            l.size * l.dtype.itemsize for p, l in
+            jax.tree_util.tree_leaves_with_path(jax.eval_shape(
+                lambda: init_cache(cfg, params, self.pool_slots, max_len,
+                                   self.dtype, kv_dtype=self._kv_dtype_arg)))
+            if any(getattr(k, "key", None) in ("k_scale", "v_scale")
+                   for k in p))
         # device-resident batch state (DESIGN.md §6): last token per slot and
         # the current iteration's membership mask, mutated only by small
         # jitted scatters / the decode calls themselves
@@ -408,10 +440,12 @@ class JaxRealBackend(ExecutionBackend):
     def _extend_fn(self, c: int):
         from repro.models import extend
         cfg = self.cfg
+        kb = self.kernel_backend
 
         def build():
             def fn(params, cache, toks):
-                logits, cache = extend(cfg, params, cache, toks)
+                logits, cache = extend(cfg, params, cache, toks,
+                                       kernel_backend=kb)
                 return logits.argmax(-1).astype(self._jnp.int32)[0], cache
             return fn
         return self._jitted(("extend", c), build, donate=(1,))
@@ -438,7 +472,8 @@ class JaxRealBackend(ExecutionBackend):
                 sub = slice_rows(pool, rows) if rows < pool_size else pool
                 nxt, _, sub = decode_step(cfg, params, sub, toks[:rows],
                                           mask[:rows], kv_limit=kvl,
-                                          full_alloc=max_len)
+                                          full_alloc=max_len,
+                                          kernel_backend=self.kernel_backend)
                 new_t = jnp.where(mask[:rows], nxt, toks[:rows])
                 if rows < pool_size:
                     pool = write_rows_prefix(pool, sub, rows, kvl, max_len)
@@ -468,7 +503,8 @@ class JaxRealBackend(ExecutionBackend):
                 sub = slice_rows(pool, rows) if rows < pool_size else pool
                 block, t, sub = decode_run(cfg, params, sub, toks[:rows],
                                            mask[:rows], n_steps,
-                                           kv_limit=kvl, full_alloc=max_len)
+                                           kv_limit=kvl, full_alloc=max_len,
+                                           kernel_backend=self.kernel_backend)
                 if rows < pool_size:
                     pool = write_rows_prefix(pool, sub, rows, kvl, max_len)
                     toks = toks.at[:rows].set(t)
@@ -519,6 +555,7 @@ class JaxRealBackend(ExecutionBackend):
         cfg = self.cfg
         jax, jnp = self._jax, self._jnp
         max_len = self.max_len
+        kb = self.kernel_backend
 
         def build():
             def fn(params, pool, toks_vec, tok_buf, start, slot):
@@ -529,7 +566,8 @@ class JaxRealBackend(ExecutionBackend):
                         tok_buf, (jnp.int32(0), start), (1, sizes[0]))
                     logits, pool = extend_row(cfg, params, pool, chunk, slot,
                                               kv_limit=kv_limit,
-                                              full_alloc=max_len)
+                                              full_alloc=max_len,
+                                              kernel_backend=kb)
                 else:
                     # bucket pair: gather/truncate the row view once, extend
                     # per bucket, write the whole span back once
@@ -539,7 +577,8 @@ class JaxRealBackend(ExecutionBackend):
                     for c in sizes:
                         chunk = jax.lax.dynamic_slice(
                             tok_buf, (jnp.int32(0), start + off), (1, c))
-                        logits, view = extend(cfg, params, view, chunk)
+                        logits, view = extend(cfg, params, view, chunk,
+                                              kernel_backend=kb)
                         off += c
                     pool = write_row_slice(pool, view, slot, start, off)
                 nxt = logits.argmax(-1).astype(jnp.int32)[0]
@@ -614,7 +653,7 @@ class JaxRealBackend(ExecutionBackend):
         old, p = self._pool, self.pool_slots
         self.pool_slots = p * 2
         new = init_cache(self.cfg, self.params, self.pool_slots, self.max_len,
-                         self.dtype)
+                         self.dtype, kv_dtype=self._kv_dtype_arg)
         # un-jitted on purpose: builds fresh (donation-safe) buffers
         self._pool = copy_into_prefix(new, old, p)
         for s in range(p, self.pool_slots):
@@ -721,7 +760,8 @@ class JaxRealBackend(ExecutionBackend):
         if rid in self._scratch and self._scratch_pos[rid] == seq_start:
             return
         self._scratch[rid] = init_cache(self.cfg, self.params, 1,
-                                        self.max_len, self.dtype)
+                                        self.max_len, self.dtype,
+                                        kv_dtype=self._kv_dtype_arg)
         self._scratch_pos[rid] = 0
         if seq_start > 0:
             self._run_bucketed(req, 0, seq_start)
@@ -1175,6 +1215,9 @@ class JaxRealBackend(ExecutionBackend):
                 "decode_kv_limit": self.decode_kv_limit,
                 "kv_bytes_decode": self.kv_bytes_decode,
                 "pool_slots": self.pool_slots,
+                "kv_dtype": self.kv_dtype,
+                "kernel_backend": self.kernel_backend,
+                "quant_scale_bytes": self.quant_scale_bytes,
                 "prefix_hits": self.prefix_hits,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "prefix_hit_rate": self.prefix_hit_tokens

@@ -104,6 +104,8 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  elastic_decode: bool = True,
                  prefix_cache: bool = True,
                  prefix_cache_tokens: Optional[int] = None,
+                 kv_dtype: str = "bf16",
+                 kernel_backend: str = "xla",
                  **sched_kw):
         # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
         # the scheduler's plan-truncation arithmetic must mirror the
@@ -123,7 +125,10 @@ class RealAgentXPUEngine(AgentXPUEngine):
             # shared-prefix KV reuse (DESIGN.md §10); prefix_cache=False is
             # the cold-prefill baseline (--no-prefix-cache)
             prefix_cache=prefix_cache,
-            prefix_cache_tokens=prefix_cache_tokens)
+            prefix_cache_tokens=prefix_cache_tokens,
+            # int8 KV pool / Pallas attention kernels (DESIGN.md §11);
+            # bf16+xla is the exactness baseline every trace test pins
+            kv_dtype=kv_dtype, kernel_backend=kernel_backend)
         self._pending: List[Request] = []
         self._live: List[Request] = []  # everything owned by the active run
 

@@ -15,3 +15,19 @@ _COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
 def tpu_compiler_params(**kwargs):
     """Build the TPU compiler-params object for ``pl.pallas_call``."""
     return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+def clamp_block(extent: int, block: int) -> int:
+    """Largest block size <= ``block`` that divides ``extent``.
+
+    The kernel grids require the tiled extent to be an exact multiple of the
+    block; the historical defaults (512/128) silently assumed ring/prompt
+    extents at least that large.  Clamping to a divisor keeps tiny-config and
+    small ``max_len`` paths on a valid grid instead of tripping the
+    divisibility assert."""
+    if extent <= 0:
+        raise ValueError(f"cannot tile empty extent {extent}")
+    block = max(1, min(block, extent))
+    while extent % block:
+        block -= 1
+    return block

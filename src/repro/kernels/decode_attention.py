@@ -7,6 +7,15 @@ head — the GQA bandwidth saving the cache layout exists for.  Online-softmax
 state (m, l, acc) is VMEM scratch carried across kv tiles; slot validity
 comes from the ``slot_pos`` ring-buffer positions (-1 = empty), which also
 encodes causality and the sliding window.
+
+Elastic dispatch (DESIGN.md §9) plugs in via ``kv_limit``: a static bound on
+the live prefix shrinks the kv grid so the kernel only ever *addresses* the
+first ``kv_limit`` ring slots of the full cache — the grid subsumes the
+``truncate_rings`` view copy the XLA path needs.
+
+Quantized pools (DESIGN.md §11) plug in via ``k_scale``/``v_scale``
+(B, S, Hkv) f32: int8 cache tiles are dequantized in VMEM right before the
+score/context matmuls, so the HBM stream stays 1 byte/element.
 """
 from __future__ import annotations
 
@@ -17,13 +26,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import clamp_block, tpu_compiler_params
 
 NEG_INF = -1e30
 
 
-def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, block_k, n_kv, window, scale, G):
+def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, *rest,
+                   block_k, n_kv, window, scale, G, quant):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -35,6 +48,9 @@ def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
     k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
     v = v_ref[0, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bk)
 
     cur = cur_pos_ref[pl.program_id(0)]  # this batch element's position
@@ -61,16 +77,24 @@ def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 
 def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
+                     k_scale=None, v_scale=None, kv_limit=None,
                      block_k=512, interpret=False):
     """q: (B, Hq, hd); caches: (B, S, Hkv, hd); slot_pos: (B, S) int32;
-    cur_pos: (B,) int32.  Returns (B, Hq, hd)."""
+    cur_pos: (B,) int32.  Returns (B, Hq, hd).
+
+    ``kv_limit`` (static) restricts the kv grid to the first ``kv_limit``
+    ring slots — the caller guarantees every live position sits below it, as
+    in ``kvcache.truncate_rings``.  ``k_scale``/``v_scale`` (B, S, Hkv) f32
+    mark an int8 cache and are applied in-kernel per tile.
+    """
     B, Hq, hd = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
-    block_k = min(block_k, S)
-    assert S % block_k == 0, (S, block_k)
-    n_kv = S // block_k
+    S_eff = S if kv_limit is None else max(1, min(int(kv_limit), S))
+    block_k = clamp_block(S_eff, block_k)
+    n_kv = S_eff // block_k
     scale = 1.0 / (hd ** 0.5)
+    quant = k_scale is not None
 
     # layout: group q by kv head -> (B, Hkv, G, hd); caches head-major
     qg = q.reshape(B, Hkv, G, hd)
@@ -78,18 +102,25 @@ def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
     vc = jnp.swapaxes(v_cache, 1, 2)
 
     kernel = functools.partial(_decode_kernel, block_k=block_k, n_kv=n_kv,
-                               window=window, scale=scale, G=G)
+                               window=window, scale=scale, G=G, quant=quant)
     grid = (B, Hkv, n_kv)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),  # cur_pos (B,) scalars
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+        pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
+    ]
+    inputs = [cur_pos.astype(jnp.int32), qg, kc, vc, slot_pos]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, block_k), lambda b, h, ki: (b, h, ki)),
+                     pl.BlockSpec((1, 1, block_k), lambda b, h, ki: (b, h, ki))]
+        inputs += [jnp.swapaxes(k_scale, 1, 2),  # (B, Hkv, S)
+                   jnp.swapaxes(v_scale, 1, 2)]
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # cur_pos (B,) scalars
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
         scratch_shapes=[
@@ -101,5 +132,5 @@ def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="decode_attention",
-    )(cur_pos.astype(jnp.int32), qg, kc, vc, slot_pos)
+    )(*inputs)
     return out.reshape(B, Hq, hd)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import clamp_block, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -88,9 +88,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, pos_base=0,
     B, Hq, Sq, hd = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     G = Hq // Hkv
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Skv)
-    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    block_q = clamp_block(Sq, block_q)
+    block_k = clamp_block(Skv, block_k)
     n_q = Sq // block_q
     n_kv = Skv // block_k
     scale = 1.0 / (hd ** 0.5)
@@ -127,3 +126,119 @@ def flash_attention(q, k, v, *, causal=True, window=None, pos_base=0,
         name="flash_attention",
     )(jnp.asarray([pos_base], jnp.int32), q, k, v)
     return out
+
+
+def _flash_pool_kernel(pos_q_ref, pos_kv_ref, q_ref, k_ref, v_ref, *rest,
+                       n_kv, window, scale, quant):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    pq = pos_q_ref[0][:, None]   # (bq, 1) absolute positions of the chunk
+    pk = pos_kv_ref[0][None, :]  # (1, bk) ring-slot positions (-1 = empty)
+    ok = (pk >= 0) & (pk <= pq)
+    if window is not None:
+        ok &= pk > pq - window
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pool(q, k, v, pos_q, pos_kv, *, window=None,
+                         k_scale=None, v_scale=None, kv_limit=None,
+                         block_q=128, block_k=128, interpret=False):
+    """Chunked prefill over pool ring rows (in-pool prefill, DESIGN.md §7).
+
+    q: (B, Hq, Sq, hd) — the current chunk's queries;
+    k/v: (B, Hkv, Skv, hd) — the row's ring buffer (chunk K/V already
+    written); pos_q: (B, Sq) and pos_kv: (B, Skv) int32 absolute positions
+    (-1 = empty slot).  Causality, ring validity and the sliding window all
+    come from the position arrays — exactly the mask
+    ``models.attention.chunked_attention`` applies — so ring wrap-around and
+    masked prefix-cache overhangs need no special cases.  Unlike the
+    contiguous ``flash_attention`` above, kv tiles cannot be skipped by
+    block-range tests (slot order is not position order); every tile is
+    scored and masking does the rest.
+
+    ``kv_limit`` (static) restricts the kv grid to the first ``kv_limit``
+    ring slots; ``k_scale``/``v_scale`` (B, Hkv, Skv) f32 mark an int8 ring
+    and dequantize in-kernel.  Returns (B, Hq, Sq, hd).
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Skv_eff = Skv if kv_limit is None else max(1, min(int(kv_limit), Skv))
+    block_q = clamp_block(Sq, block_q)
+    block_k = clamp_block(Skv_eff, block_k)
+    n_q = Sq // block_q
+    n_kv = Skv_eff // block_k
+    scale = 1.0 / (hd ** 0.5)
+    quant = k_scale is not None
+
+    kernel = functools.partial(_flash_pool_kernel, n_kv=n_kv, window=window,
+                               scale=scale, quant=quant)
+    grid = (B, Hq, n_q, n_kv)
+    in_specs = [
+        pl.BlockSpec((1, block_q), lambda b, h, qi, ki: (b, qi)),
+        pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)),
+        pl.BlockSpec((1, 1, block_q, hd),
+                     lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_k, hd),
+                     lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, hd),
+                     lambda b, h, qi, ki: (b, h // G, ki, 0)),
+    ]
+    inputs = [pos_q.astype(jnp.int32), pos_kv.astype(jnp.int32), q, k, v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_k), lambda b, h, qi, ki: (b, h // G, ki)),
+            pl.BlockSpec((1, 1, block_k), lambda b, h, qi, ki: (b, h // G, ki)),
+        ]
+        inputs += [k_scale, v_scale]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="flash_attention_pool",
+    )(*inputs)
+    return out
+

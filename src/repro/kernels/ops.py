@@ -33,15 +33,30 @@ def flash_attention(q, k, v, *, causal=True, window=None, pos_base=0,
                                block_k=block_k, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "block_k",
+@functools.partial(jax.jit, static_argnames=("window", "kv_limit", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pool(q, k, v, pos_q, pos_kv, *, window=None,
+                         k_scale=None, v_scale=None, kv_limit=None,
+                         block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention_pool(q, k, v, pos_q, pos_kv, window=window,
+                                    k_scale=k_scale, v_scale=v_scale,
+                                    kv_limit=kv_limit, block_q=block_q,
+                                    block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_limit", "block_k",
                                              "interpret"))
 def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=None,
+                     k_scale=None, v_scale=None, kv_limit=None,
                      block_k=512, interpret=None):
     if interpret is None:
         interpret = _interpret_default()
     return _dec.decode_attention(q, k_cache, v_cache, slot_pos, cur_pos,
-                                 window=window, block_k=block_k,
-                                 interpret=interpret)
+                                 window=window, k_scale=k_scale,
+                                 v_scale=v_scale, kv_limit=kv_limit,
+                                 block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

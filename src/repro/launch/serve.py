@@ -71,6 +71,18 @@ def main(argv=None):
                          "prefills cold even when its prefix is already "
                          "resident (the baseline of BENCH_prefill.json's "
                          "prefix_reuse entry)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="with --real: KV-pool storage dtype. int8 stores "
+                         "the ring as symmetric per-(slot, kv head) int8 "
+                         "with f32 scales, dequantized inside the decode "
+                         "program (DESIGN.md §11); bf16 is the exactness "
+                         "baseline")
+    ap.add_argument("--kernel-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="with --real: attention kernel routing. pallas "
+                         "runs the pool-native decode/prefill kernels "
+                         "(interpret mode off-TPU); xla is the lowered "
+                         "reference — both serve identical tokens")
     ap.add_argument("--system-prompt-len", type=int, default=32,
                     help="with --real: shared system-prompt tokens "
                          "prepended to every prompt (agentic flows share "
@@ -116,7 +128,8 @@ def main(argv=None):
             # donation; --no-device-resident restores the full legacy flow)
             in_pool_prefill=False if args.no_in_pool_prefill else None,
             elastic_decode=not args.no_elastic_decode,
-            prefix_cache=not args.no_prefix_cache)
+            prefix_cache=not args.no_prefix_cache,
+            kv_dtype=args.kv_dtype, kernel_backend=args.kernel_backend)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -137,6 +150,9 @@ def main(argv=None):
                   f"{st['decode_rows']}/{st['pool_slots']} rows x "
                   f"kv_limit {st['decode_kv_limit']}/256, "
                   f"{st['kv_bytes_decode']} KV bytes streamed")
+            print(f"[real] kv pool: dtype {st['kv_dtype']}, "
+                  f"kernel backend {st['kernel_backend']}, "
+                  f"{st['quant_scale_bytes']} quant scale bytes")
             print(f"[real] prefill: {st['prefill_device_calls']} device "
                   f"calls, {st['prefill_host_syncs']} host syncs, "
                   f"{st['bind_device_calls']} bind scatters, "

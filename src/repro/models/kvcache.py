@@ -13,6 +13,16 @@ Layout mirrors the parameter layout of ``transformer.py``:
 Attention state is a ring buffer of ``alloc`` slots; ``slot_pos`` stores each
 slot's absolute position (-1 = empty) so sliding windows and RoPE stay
 correct after wrap-around.
+
+Quantized pools (DESIGN.md §11): ``kv_dtype="int8"`` stores the ``k``/``v``
+ring payload as symmetric int8 with per-(ring slot, kv head) float32 scales
+(``k_scale``/``v_scale``, shape (B, alloc, Hkv)).  The scale leaves carry the
+same ring axis as the payload, so every view/write helper in this module
+(truncate/untruncate, row slices, prefix copies) treats them as ordinary ring
+payload and the elastic-dispatch + prefix-cache machinery works unchanged on
+quantized pools.  Dequantization happens at the attention read
+(``transformer._attn_mix_extend`` or in-kernel in the Pallas backend), never
+as a separate pass.
 """
 from __future__ import annotations
 
@@ -20,6 +30,38 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# smallest representable scale: keeps all-zero K/V rows exactly zero after
+# the round trip instead of dividing by zero
+_QUANT_EPS = 1e-8
+
+
+def kv_supports_int8(cfg) -> bool:
+    """int8 KV quantization covers the standard k/v ring layout; MLA caches
+    store a latent (``c``/``kr``) whose per-head scale axis does not exist."""
+    return not cfg.use_mla
+
+
+def quantize_kv(x):
+    """Symmetric per-(…, head) int8 quantization of a K/V tensor whose
+    trailing axis is ``head_dim``: returns ``(q int8, scale f32)`` with
+    ``scale = max|x| / 127`` over the head_dim axis (shape = x.shape[:-1]).
+    Exactly invertible to within ``scale/2`` per element — the bound the
+    round-trip tests assert."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _QUANT_EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Fuse-friendly inverse of :func:`quantize_kv`: ``q * scale`` broadcast
+    over the head_dim axis.  Called inside the jitted attention program (XLA
+    fuses it into the score matmul's operand read) or inside the Pallas
+    kernels — never materialized pool-wide."""
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
 
 
 def attn_alloc_len(cfg, max_len: int, window: Optional[int]) -> int:
@@ -29,9 +71,14 @@ def attn_alloc_len(cfg, max_len: int, window: Optional[int]) -> int:
 
 def init_layer_state(cfg, kind: str, batch: int, max_len: int,
                      dtype=jnp.bfloat16, window: Optional[int] = None,
-                     cross_len: int = 0) -> dict:
+                     cross_len: int = 0, kv_dtype: Optional[str] = None) -> dict:
+    quant = kv_dtype == "int8"
     if kind == "attn":
         if cfg.use_mla:
+            if quant:
+                raise NotImplementedError(
+                    "int8 KV quantization is per-(slot, kv head); MLA caches "
+                    "a latent without a head axis (kv_supports_int8)")
             alloc = attn_alloc_len(cfg, max_len, window)
             st = {
                 "c": jnp.zeros((batch, alloc, cfg.kv_lora_rank), dtype),
@@ -41,11 +88,15 @@ def init_layer_state(cfg, kind: str, batch: int, max_len: int,
         else:
             alloc = attn_alloc_len(cfg, max_len, window)
             hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            payload_dtype = jnp.int8 if quant else dtype
             st = {
-                "k": jnp.zeros((batch, alloc, hkv, hd), dtype),
-                "v": jnp.zeros((batch, alloc, hkv, hd), dtype),
+                "k": jnp.zeros((batch, alloc, hkv, hd), payload_dtype),
+                "v": jnp.zeros((batch, alloc, hkv, hd), payload_dtype),
                 "slot_pos": jnp.full((batch, alloc), -1, jnp.int32),
             }
+            if quant:
+                st["k_scale"] = jnp.zeros((batch, alloc, hkv), jnp.float32)
+                st["v_scale"] = jnp.zeros((batch, alloc, hkv), jnp.float32)
         if cross_len:
             hkv, hd = cfg.num_kv_heads, cfg.head_dim
             st["xk"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
@@ -115,8 +166,14 @@ def read_row(pool, slot):
                         pool)
 
 
-_ATTN_PAYLOAD = frozenset({"k", "v", "c", "kr", "xk", "xv"})
-_RING_PAYLOAD = frozenset({"k", "v", "c", "kr", "slot_pos"})
+# The quantization scale leaves (k_scale/v_scale, (B, alloc, Hkv)) carry the
+# same ring axis as k/v, so they join both payload families: ring-sliced by
+# every view/write helper, and COW-preserved (not zeroed) by reset_row — a
+# stale scale under a -1 slot_pos is as invisible as the stale payload.
+_ATTN_PAYLOAD = frozenset({"k", "v", "c", "kr", "xk", "xv",
+                           "k_scale", "v_scale"})
+_RING_PAYLOAD = frozenset({"k", "v", "c", "kr", "slot_pos",
+                           "k_scale", "v_scale"})
 
 
 def write_row_slice(pool, one, slot, start, c):

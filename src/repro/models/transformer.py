@@ -350,16 +350,55 @@ def _attn_mix_extend(cfg, lp, x, st, ctx):
     q = apply_rope(q.reshape(B, C, Hq, hd), pos, cfg.rope_theta)
     k = apply_rope(k.reshape(B, C, Hkv, hd), pos, cfg.rope_theta)
     v = v.reshape(B, C, Hkv, hd)
-    st = dict(st, k=write(st["k"], k), v=write(st["v"], v),
-              slot_pos=write(st["slot_pos"], pos))
+    # int8 pool (DESIGN.md §11): quantize the chunk's K/V once at write time;
+    # reads dequantize inside the same jitted program (XLA fuses the scale
+    # multiply into the score/context matmul reads; the Pallas kernels take
+    # the int8 ring + scales directly), so a quantized decode step stays ONE
+    # device program per (rows, kv_limit) bucket.
+    quant = "k_scale" in st
+    if quant:
+        qk, ks = kvcache.quantize_kv(k)
+        qv, vs = kvcache.quantize_kv(v)
+        st = dict(st, k=write(st["k"], qk), v=write(st["v"], qv),
+                  k_scale=write(st["k_scale"], ks),
+                  v_scale=write(st["v_scale"], vs),
+                  slot_pos=write(st["slot_pos"], pos))
+    else:
+        st = dict(st, k=write(st["k"], k), v=write(st["v"], v),
+                  slot_pos=write(st["slot_pos"], pos))
+    # Pallas hot path (kernel_backend="pallas"): same mask semantics as the
+    # XLA reference, GQA done natively in-kernel.  Sharded runs keep the XLA
+    # path — the kernels are single-device.
+    pallas = ctx.get("kernel_backend") == "pallas" and not ctx.get("tp_axis")
     if C == 1:
-        k_r = _constrain_cache_seq(st["k"], ctx)
-        v_r = _constrain_cache_seq(st["v"], ctx)
-        sp_r = _constrain_cache_seq(st["slot_pos"], ctx)
-        out = decode_attention(q[:, 0], k_r, v_r, sp_r,
-                               pos[:, 0], window=window)[:, None]
+        if pallas:
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(
+                q[:, 0], st["k"], st["v"], st["slot_pos"], pos[:, 0],
+                window=window, k_scale=st.get("k_scale"),
+                v_scale=st.get("v_scale"))[:, None]
+        else:
+            k_r = _constrain_cache_seq(st["k"], ctx)
+            v_r = _constrain_cache_seq(st["v"], ctx)
+            sp_r = _constrain_cache_seq(st["slot_pos"], ctx)
+            if quant:
+                k_r = kvcache.dequantize_kv(k_r, st["k_scale"], k.dtype)
+                v_r = kvcache.dequantize_kv(v_r, st["v_scale"], v.dtype)
+            out = decode_attention(q[:, 0], k_r, v_r, sp_r,
+                                   pos[:, 0], window=window)[:, None]
+    elif pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention_pool(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(st["k"], 1, 2),
+            jnp.swapaxes(st["v"], 1, 2), pos, st["slot_pos"], window=window,
+            k_scale=jnp.swapaxes(st["k_scale"], 1, 2) if quant else None,
+            v_scale=jnp.swapaxes(st["v_scale"], 1, 2) if quant else None)
+        out = jnp.swapaxes(out, 1, 2)
     else:
         kk, vv = st["k"], st["v"]
+        if quant:
+            kk = kvcache.dequantize_kv(kk, st["k_scale"], k.dtype)
+            vv = kvcache.dequantize_kv(vv, st["v_scale"], v.dtype)
         if ctx.get("tp_axis"):
             kk, vv = _expand_kv(kk, Hq // Hkv), _expand_kv(vv, Hq // Hkv)
             q = _constrain_heads(q, ctx)
@@ -638,12 +677,18 @@ def forward(cfg, params, tokens, frontend_emb=None, *, window=None,
 
 
 def init_cache(cfg, params, batch, max_len, dtype=jnp.bfloat16, *,
-               window=None, frontend_emb=None):
-    """Fresh decode state; computes encoder output / cross-KV for enc-dec."""
+               window=None, frontend_emb=None, kv_dtype=None):
+    """Fresh decode state; computes encoder output / cross-KV for enc-dec.
+
+    ``kv_dtype="int8"`` builds a quantized attention ring (int8 payload +
+    f32 ``k_scale``/``v_scale`` leaves); ``None``/"bf16" keeps the plain
+    ``dtype`` ring — the exactness baseline (DESIGN.md §11)."""
     head, pattern, repeats, tail = layout(cfg)
     cross_len = cfg.frontend_tokens if cfg.is_encoder_decoder else 0
+    kv_dtype = None if kv_dtype == "bf16" else kv_dtype
     mk = lambda kind: kvcache.init_layer_state(
-        cfg, kind, batch, max_len, dtype, window=window, cross_len=cross_len)
+        cfg, kind, batch, max_len, dtype, window=window, cross_len=cross_len,
+        kv_dtype=kv_dtype)
     cache = {
         "pos": jnp.zeros((batch,), jnp.int32),
         "head": tuple(mk(k) for k in head),
@@ -681,10 +726,12 @@ def init_cache(cfg, params, batch, max_len, dtype=jnp.bfloat16, *,
 
 def extend(cfg, params, cache, tokens, *, window=None, frontend_emb=None,
            q_chunk=512, kv_chunk=512, remat=False, capacity_factor=1.25,
-           batch_axes=None, tp_axis=None):
+           batch_axes=None, tp_axis=None, kernel_backend="xla"):
     """Process a chunk of C tokens against the cache (C == 1 => decode step).
 
     tokens: (B, C) int32.  Returns (logits_last (B, V), new_cache).
+    ``kernel_backend="pallas"`` routes attention through the Pallas kernels
+    (``repro.kernels``); "xla" keeps the reference path.
     """
     B, C = tokens.shape
     x = embed_tokens(tokens, params["embed"]["w"])
@@ -698,7 +745,8 @@ def extend(cfg, params, cache, tokens, *, window=None, frontend_emb=None,
     ctx = _default_ctx(cfg, mode, pos0=cache["pos"], window=window,
                        q_chunk=q_chunk, kv_chunk=kv_chunk,
                        capacity_factor=capacity_factor, batch_axes=batch_axes,
-                       tp_axis=tp_axis, **ctx_kw)
+                       tp_axis=tp_axis, kernel_backend=kernel_backend,
+                       **ctx_kw)
     x, new_cache, _ = _run_trunk(cfg, params, x, cache, ctx, remat=remat)
     new_cache = dict(new_cache, pos=cache["pos"] + C)
     x_last = x[:, -1, :]
