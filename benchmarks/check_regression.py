@@ -72,7 +72,17 @@ CHECKS = [
     # Pallas kernel routing must keep serving token-exact vs the XLA
     # reference (interpret-mode smoke on CPU runners)
     ("BENCH_decode.json", "pallas_parity.token_exact", "flag", 0.0, 1.0),
+    # failure model (DESIGN.md §12): reactive p50 TTFT under a sustained
+    # transient-device-fault load must stay within 2x the fault-free
+    # abortable run (ratio = faulty_p50 / abortable_p50, acceptance
+    # ceiling 2.0), and the faulty run must retire with zero slot leaks
+    # (validate() clean + every slot back in the free heap)
+    ("BENCH_reactive.json", "reactive_ttft_under_faults_ratio", "lower",
+     0.0, 2.0),
+    ("BENCH_reactive.json", "no_slot_leak", "flag", 0.0, 1.0),
 ]
+
+DIRECTIONS = ("higher", "lower", "lower_inverse", "flag")
 
 
 def _lookup(doc: dict, path: str):
@@ -87,6 +97,13 @@ def _lookup(doc: dict, path: str):
 def compare(baseline_dir: str, fresh_dir: str) -> int:
     failures, rows = [], []
     for fname, path, direction, thr, cap in CHECKS:
+        if direction not in DIRECTIONS:
+            # a typo'd CHECKS entry must never read as a pass: an unknown
+            # direction would previously fall through to the last branch
+            # and gate with lower_inverse semantics silently
+            failures.append(f"{fname}:{path}: unknown gate direction "
+                            f"{direction!r} (expected one of {DIRECTIONS})")
+            continue
         bpath = os.path.join(baseline_dir, fname)
         fpath = os.path.join(fresh_dir, fname)
         if not os.path.exists(bpath):
@@ -116,6 +133,18 @@ def compare(baseline_dir: str, fresh_dir: str) -> int:
                   f"{fname} to arm it)", file=sys.stderr)
             rows.append((fname, path, None, fresh,
                          "no baseline metric (WARNED, not gated)"))
+            continue
+        if not isinstance(base, (int, float)) or \
+                (isinstance(base, bool) and direction != "flag"):
+            # a malformed COMMITTED baseline entry (a dict, string, list,
+            # or stray bool where a number belongs) is a hard failure, not
+            # a skip: it means the committed artifact is corrupt or the
+            # CHECKS path points mid-tree, and every comparison against it
+            # would be garbage
+            failures.append(
+                f"{fname}:{path}: committed baseline entry is malformed "
+                f"({type(base).__name__} {base!r}, expected a number) — "
+                f"regenerate and recommit {fname}")
             continue
         if fresh is None or not isinstance(fresh, (int, float)):
             failures.append(f"{fname}:{path}: metric missing in fresh run")

@@ -552,7 +552,7 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
     n_pro = int(os.environ.get("BENCH_REACTIVE_REQS", "4"))
     out_tokens = int(os.environ.get("BENCH_REACTIVE_TOKENS", "128"))
     n_inj = int(os.environ.get("BENCH_REACTIVE_INJECTS", "5"))
-    reps = int(os.environ.get("BENCH_REACTIVE_REPS", "2"))
+    reps = int(os.environ.get("BENCH_REACTIVE_REPS", "4"))
     max_fused = min(out_tokens, 128)
     segment = 4
     plen, r_plen, r_out = 32, 16, 8
@@ -576,7 +576,18 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
     def pct_ms(vals, q):
         return float(np.percentile(vals, q)) * 1e3 if vals else None
 
-    def run_mode(abortable):
+    def run_mode(abortable, faults_period=None):
+        # faulty-load mode (DESIGN.md §12): a sustained transient device
+        # fault every ``faults_period`` decode dispatches; each firing is
+        # retried by replaying the abortable segment, so the run completes
+        # with every flow surviving — the gated question is how much of the
+        # reactive-latency win survives the fault load, and whether slot
+        # accounting stays leak-free under constant retries
+        faults = None
+        if faults_period is not None:
+            from repro.core.faults import Fault, FaultInjector
+            faults = FaultInjector([Fault(site="device", stage="decode",
+                                          nth=1, period=faults_period)])
         # pool sized for the worst case of the non-abortable mode, where
         # injections bunch up behind eager runs and several reactives
         # overlap: growth would recompile every decode program mid-measure
@@ -584,7 +595,8 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
             cfg, params, max_len=max_len,
             pool_slots=n_pro + max(2, n_inj),
             max_fused_steps=max_fused, abortable_runs=abortable,
-            decode_segment_steps=segment, elastic_decode=False)
+            decode_segment_steps=segment, elastic_decode=False,
+            faults=faults)
         be = eng.backend
         # warm-up 1: proactive-only trace — compiles the prefill/decode
         # shapes of the saturating load; a second, fully-compiled serve of
@@ -610,7 +622,17 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
                                        be._mask)
             b *= 2
 
-        best = None
+        # percentiles are POOLED across reps (reps x n_inj TTFT samples per
+        # mode) rather than best-of-rep: the gated ratios divide two small-
+        # sample p50s, and pooling roughly halves their run-to-run variance
+        # — a best-of pick can swing the faults ratio across its acceptance
+        # ceiling on an unlucky run
+        all_ttfts: list = []
+        all_r_tbt: list = []
+        all_p_tbt: list = []
+        pro_tokens_total, wall_total = 0, 0.0
+        diffs = {"aborted_runs": 0, "aborted_steps": 0,
+                 "decode_segments": 0, "jit_compilations": 0}
         for rep in range(reps):
             base = 1000 * (rep + 1)
             tok_wall: Dict[int, list] = {}
@@ -660,31 +682,46 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
             pro_tokens = sum(r.decoded - 1 for r in m.completed
                              if r.priority == Priority.PROACTIVE)
             st = eng.stats()
-            row = {
-                "mode": "abortable" if abortable else "baseline",
-                "n_injected": len(ttfts),
-                "reactive_ttft_p50_ms": pct_ms(ttfts, 50),
-                "reactive_ttft_p95_ms": pct_ms(ttfts, 95),
-                "reactive_tbt_p50_ms": pct_ms(r_tbt, 50),
-                "reactive_tbt_p95_ms": pct_ms(r_tbt, 95),
-                "proactive_tbt_p50_ms": pct_ms(p_tbt, 50),
-                "proactive_tokens_per_s": pro_tokens / max(wall, 1e-9),
-                "aborted_runs": st["aborted_runs"] - s0["aborted_runs"],
-                "aborted_steps": st["aborted_steps"] - s0["aborted_steps"],
-                "decode_segments":
-                    st["decode_segments"] - s0["decode_segments"],
-                "jit_compilations_mid_run":
-                    st["jit_compilations"] - s0["jit_compilations"],
-                "wall_s": wall,
-            }
-            if best is None or (row["reactive_ttft_p50_ms"] or 1e9) < \
-                    (best["reactive_ttft_p50_ms"] or 1e9):
-                best = row
-        return best
+            all_ttfts.extend(ttfts)
+            all_r_tbt.extend(r_tbt)
+            all_p_tbt.extend(p_tbt)
+            pro_tokens_total += pro_tokens
+            wall_total += wall
+            for k in diffs:
+                diffs[k] += st[k] - s0[k]
+        st = eng.stats()
+        row = {
+            "mode": "faulty" if faults_period is not None
+            else ("abortable" if abortable else "baseline"),
+            "n_injected": len(all_ttfts),
+            "reactive_ttft_p50_ms": pct_ms(all_ttfts, 50),
+            "reactive_ttft_p95_ms": pct_ms(all_ttfts, 95),
+            "reactive_tbt_p50_ms": pct_ms(all_r_tbt, 50),
+            "reactive_tbt_p95_ms": pct_ms(all_r_tbt, 95),
+            "proactive_tbt_p50_ms": pct_ms(all_p_tbt, 50),
+            "proactive_tokens_per_s":
+                pro_tokens_total / max(wall_total, 1e-9),
+            "aborted_runs": diffs["aborted_runs"],
+            "aborted_steps": diffs["aborted_steps"],
+            "decode_segments": diffs["decode_segments"],
+            "jit_compilations_mid_run": diffs["jit_compilations"],
+            "wall_s": wall_total,
+        }
+        if faults_period is not None:
+            row["device_fault_retries"] = st["device_fault_retries"]
+            row["quarantined_flows"] = st["quarantined_flows"]
+            # zero-leak audit after the faulty reps: slot accounting
+            # consistent, every slot back in the free heap
+            be_f = eng.backend
+            row["no_slot_leak"] = int(
+                be_f.validate() == [] and not be_f._slot
+                and len(be_f._free) == be_f.pool_slots)
+        return row
 
     baseline = run_mode(False)
     abortable = run_mode(True)
-    for row in (baseline, abortable):
+    faulty = run_mode(True, faults_period=5)
+    for row in (baseline, abortable, faulty):
         # a mode whose deadlines all landed past the run's drain measured
         # NOTHING — fail the benchmark loudly instead of writing a fake
         # 0.0 ttft_reduction that check_regression would misreport as a
@@ -698,14 +735,26 @@ def bench_reactive_latency() -> Tuple[List[dict], float]:
         max(abortable["reactive_ttft_p50_ms"] or 1e9, 1e-9)
     ratio = abortable["proactive_tokens_per_s"] / \
         max(baseline["proactive_tokens_per_s"], 1e-9)
-    rows = [baseline, abortable]
+    # failure-model gates (DESIGN.md §12): the reactive-latency win must
+    # survive sustained transient device faults (acceptance: p50 TTFT
+    # within 2x the fault-free abortable run), survivor throughput must
+    # hold, and the run must retire with zero slot leaks
+    faults_ratio = (faulty["reactive_ttft_p50_ms"] or 1e9) / \
+        max(abortable["reactive_ttft_p50_ms"] or 1e-9, 1e-9)
+    survivor_ratio = faulty["proactive_tokens_per_s"] / \
+        max(abortable["proactive_tokens_per_s"], 1e-9)
+    rows = [baseline, abortable, faulty]
     out = {"n_proactive": n_pro, "out_tokens": out_tokens,
            "n_injections": n_inj, "max_fused_steps": max_fused,
            "decode_segment_steps": segment,
            "reactive_prompt_len": r_plen, "reactive_out_tokens": r_out,
            "baseline": baseline, "abortable": abortable,
+           "faulty": faulty,
            "ttft_reduction": reduction,
-           "proactive_throughput_ratio": ratio}
+           "proactive_throughput_ratio": ratio,
+           "reactive_ttft_under_faults_ratio": faults_ratio,
+           "survivor_throughput_ratio": survivor_ratio,
+           "no_slot_leak": faulty["no_slot_leak"]}
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_reactive.json")
     with open(path, "w") as f:

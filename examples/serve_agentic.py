@@ -57,6 +57,21 @@ def main():
                          "flow's prompt (0 disables); with the prefix "
                          "cache on, flows after the first start prefill "
                          "at the hit boundary")
+    ap.add_argument("--pool-slots-max", type=int, default=None,
+                    help="hard KV occupancy cap; saturated arrivals walk "
+                         "the degradation ladder (evict -> shrink -> defer "
+                         "-> reject, DESIGN.md §12) instead of growing "
+                         "the pool")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="reactive SLO deadline in ms from arrival; an "
+                         "expired flow is aborted at the next segment "
+                         "boundary (status timed_out)")
+    ap.add_argument("--no-isolate-flow-faults", action="store_true",
+                    help="legacy: an on_token hook exception tears down "
+                         "the whole run instead of quarantining one flow")
+    ap.add_argument("--strict-invariants", action="store_true",
+                    help="audit slot/refcount/pin accounting after every "
+                         "event-loop turn (also REPRO_STRICT_INVARIANTS=1)")
     ap.add_argument("--inject-mid-stream", action="store_true",
                     help="submit the reactive request from an on_token "
                          "callback DURING the run (streaming arrival path) "
@@ -106,7 +121,14 @@ def main():
                              elastic_decode=not args.no_elastic_decode,
                              prefix_cache=not args.no_prefix_cache,
                              kv_dtype=args.kv_dtype,
-                             kernel_backend=args.kernel_backend)
+                             kernel_backend=args.kernel_backend,
+                             pool_slots_max=args.pool_slots_max,
+                             deadline_s=None if args.deadline_ms is None
+                             else args.deadline_ms / 1000.0,
+                             isolate_flow_faults=not
+                             args.no_isolate_flow_faults,
+                             strict_invariants=True
+                             if args.strict_invariants else None)
     printer = stream_printer() if args.stream else None
     state = {"tokens": 0, "injected": False}
     # fire well inside the run even for tiny --out-tokens traces
@@ -129,12 +151,18 @@ def main():
         eng.submit(r, on_token=on_token)
     m = eng.run()
     s = m.summary()
-    print(f"\ncompleted {len(m.completed)} requests "
-          f"(sim time {m.sim_time:.2f}s)")
+    print(f"\nretired {len(m.completed)} requests "
+          f"({s['n_completed']} completed, {s['n_failed']} failed, "
+          f"{s['n_timed_out']} timed out, {s['n_rejected']} rejected; "
+          f"sim time {m.sim_time:.2f}s)")
     for r in sorted(m.completed, key=lambda r: r.id):
         toks = eng.output_tokens(r.id)
-        print(f"  req {r.id} [{r.priority.name:9s}] ttft={r.ttft*1e3:7.1f}ms "
-              f"e2e={r.e2e_latency:6.3f}s preempts={r.preempt_count} "
+        ttft = f"{r.ttft * 1e3:7.1f}ms" if r.ttft is not None else "    n/a"
+        e2e = f"{r.e2e_latency:6.3f}s" if r.e2e_latency is not None \
+            else "   n/a"
+        print(f"  req {r.id} [{r.priority.name:9s}] "
+              f"{r.terminal_status or r.state.value:9s} ttft={ttft} "
+              f"e2e={e2e} preempts={r.preempt_count} "
               f"tokens={toks[:6]}...")
     def ms(v):
         return f"{v * 1e3:.1f} ms" if v is not None else "n/a"
@@ -178,6 +206,19 @@ def main():
           f"{st['prefix_copy_device_calls']} bounded copies "
           f"({st['prefix_promotions']} donor rows promoted to the "
           f"{st['prefix_store_entries']}-entry store)")
+    sched = eng.last_sched
+    cap = st["pool_slots_max"]
+    print(f"admission ladder    : cap "
+          f"{'unbounded' if cap is None else cap}, "
+          f"{sched.pressure_evictions} pressure evictions, "
+          f"{sched.horizon_shrinks} horizon shrinks, "
+          f"{sched.admission_deferrals} deferrals, "
+          f"{sched.admission_rejections} rejections")
+    print(f"fault isolation     : {st['flow_faults']} flow faults "
+          f"({st['quarantined_flows']} flows quarantined), "
+          f"{st['device_fault_retries']} transient device retries, "
+          f"{sched.deadline_aborts} deadline aborts, "
+          f"{st['free_slots']}/{st['pool_slots']} slots free at exit")
 
 
 if __name__ == "__main__":

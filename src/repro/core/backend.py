@@ -41,6 +41,9 @@ import heapq
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.core.faults import (AllocationFault, FaultError, FaultInjector,
+                               FlowFault, InvariantViolation,
+                               PermanentDeviceFault, TransientDeviceFault)
 from repro.core.prefixcache import (PrefixCache, prefix_reuse_supported)
 from repro.core.requests import Request
 
@@ -101,6 +104,42 @@ class ExecutionBackend:
 
     def release(self, reqs: List[Request], now: float) -> None:
         pass
+
+    # -- failure model (DESIGN.md §12) ---------------------------------------
+    def deadline_expired(self, req: Request, now: float) -> bool:
+        """True once ``req`` has overrun its (relative) deadline; consulted
+        by the scheduler's per-turn poll.  The flow is then aborted at the
+        next segment boundary with the ``timed_out`` terminal status."""
+        return req.deadline is not None \
+            and now - req.arrival_time > req.deadline
+
+    def take_flow_faults(self) -> List[FlowFault]:
+        """Drain flow-attributable failures parked since the last poll
+        (hook exception, allocation failure, flow-targeted device fault).
+        The scheduler quarantines each envelope's flow as ``failed``."""
+        return []
+
+    def quarantine_flow(self, req: Request, now: float) -> None:
+        """Retire ONE failed/expired flow's execution state — slot, donor
+        refcounts, prefix pins — while keeping every other flow's committed
+        run (buffered replay rows included) intact."""
+        self.finish(req, now)
+
+    def evict_prefix_leaves(self) -> int:
+        """Degradation-ladder rung 1: force-evict unpinned prefix-cache
+        leaves; returns the number of off-pool KV rows freed."""
+        return 0
+
+    def kv_store_rows(self) -> int:
+        """Off-pool KV rows held by the prefix snapshot store (counted as
+        row-equivalents by admission occupancy)."""
+        return 0
+
+    def validate(self, strict: bool = False) -> List[str]:
+        """Audit internal accounting invariants; returns the violations
+        found (empty = clean).  ``strict=True`` raises
+        ``InvariantViolation`` instead of returning them."""
+        return []
 
     def output_tokens(self, req_id: int) -> list:
         return []
@@ -169,6 +208,29 @@ class SimBackend(ExecutionBackend):
     def release(self, reqs: List[Request], now: float) -> None:
         for r in reqs:
             self.finish(r, now)
+
+    def evict_prefix_leaves(self) -> int:
+        # drive the SAME index operation as the real backend so the
+        # admission ladder mutates sim and real prefix state identically;
+        # the sim holds no physical KV, so 0 rows are freed
+        if self._prefix is not None:
+            self._prefix.evict_unpinned()
+        return 0
+
+    def validate(self, strict: bool = False) -> List[str]:
+        problems: List[str] = []
+        if self._prefix is not None:
+            want: Dict[int, int] = {}
+            for node in self._hit_node.values():
+                want[id(node)] = want.get(id(node), 0) + 1
+            for rid, node in self._hit_node.items():
+                if node.refs < want[id(node)]:
+                    problems.append(
+                        f"prefix pin undercount: node {node.nid} refs "
+                        f"{node.refs} < {want[id(node)]} pinning flows")
+        if strict and problems:
+            raise InvariantViolation("; ".join(problems))
+        return problems
 
     def stats(self) -> dict:
         out = {"prefix_hits": self.prefix_hits,
@@ -256,7 +318,11 @@ class JaxRealBackend(ExecutionBackend):
                  prefix_cache_tokens: Optional[int] = None,
                  prefix_block: int = 1,
                  kv_dtype: str = "bf16",
-                 kernel_backend: str = "xla"):
+                 kernel_backend: str = "xla",
+                 pool_slots_max: Optional[int] = None,
+                 isolate_flow_faults: bool = True,
+                 faults: Optional[FaultInjector] = None,
+                 device_fault_retries_max: int = 3):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -323,7 +389,25 @@ class JaxRealBackend(ExecutionBackend):
         self.elastic_decode = bool(elastic_decode) and device_resident
         self.max_len = max_len
         self.dtype = dtype or jnp.float32
+        # bounded-resource failure model (DESIGN.md §12): a hard KV budget
+        # (``pool_slots_max`` caps ``_grow_pool``; exhaustion is a typed
+        # ``AllocationFault``, never silent growth), per-flow fault
+        # quarantine (``isolate_flow_faults=False`` restores raise-out),
+        # and a deterministic fault-injection seam (``core.faults``)
+        self.pool_slots_max = None if pool_slots_max is None \
+            else max(int(pool_slots_max), 1)
+        self.isolate_flow_faults = bool(isolate_flow_faults)
+        self._faults = faults
+        self._fault_retry_max = max(int(device_fault_retries_max), 0)
+        self._pending_faults: List[FlowFault] = []
+        self._quarantined: set = set()  # rids faulted, awaiting quarantine
+        self.device_fault_retries = 0  # transient launch failures retried
+        self.flow_faults = 0  # flow-attributable failures recorded
+        self.quarantined_flows = 0
+        self.pressure_evicted_nodes = 0  # ladder rung 1 eviction victims
         self.pool_slots = max(int(pool_slots), 1)
+        if self.pool_slots_max is not None:
+            self.pool_slots = min(self.pool_slots, self.pool_slots_max)
         self._pool = init_cache(cfg, params, self.pool_slots, max_len,
                                 self.dtype, kv_dtype=self._kv_dtype_arg)
         # min-heap: rebinding always takes the LOWEST free slot, so the live
@@ -436,6 +520,30 @@ class JaxRealBackend(ExecutionBackend):
             self._jit_cache[key] = fn
             self.jit_compilations += 1
         return fn
+
+    def _call(self, fn, *args, rid: Optional[int] = None,
+              stage: str = "device"):
+        """Launch one jitted program through the fault seam (DESIGN.md §12).
+
+        The injector is consulted BEFORE the launch, so a failed dispatch
+        never half-mutates the donated pool: retrying is a clean re-launch
+        of the same program — which is exactly the abortable-segment replay
+        of DESIGN.md §8 when the program is a decode segment.  Transient
+        faults are retried up to ``device_fault_retries_max`` times, then
+        escalate to ``PermanentDeviceFault``; flow-attributable call sites
+        pass ``rid`` so a targeted fault quarantines only that flow."""
+        if self._faults is not None:
+            for _ in range(self._fault_retry_max + 1):
+                try:
+                    self._faults.check("device", req_id=rid, stage=stage)
+                    break
+                except TransientDeviceFault:
+                    self.device_fault_retries += 1
+            else:
+                raise PermanentDeviceFault(
+                    f"transient device fault at {stage} persisted past "
+                    f"{self._fault_retry_max} segment replays")
+        return fn(*args)
 
     def _extend_fn(self, c: int):
         from repro.models import extend
@@ -648,10 +756,21 @@ class JaxRealBackend(ExecutionBackend):
 
     # -- slot management -----------------------------------------------------
     def _grow_pool(self):
+        """Double the pool — up to the hard ``pool_slots_max`` KV budget
+        (DESIGN.md §12).  At the cap, growth is a typed ``AllocationFault``
+        (quarantining only the requesting flow), never silent allocation:
+        bounded-resource serving means the budget holds under any load."""
         from repro.models import copy_into_prefix, init_cache
         jnp, np = self._jnp, self._np
         old, p = self._pool, self.pool_slots
-        self.pool_slots = p * 2
+        target = p * 2 if self.pool_slots_max is None \
+            else min(p * 2, self.pool_slots_max)
+        if target <= p:
+            raise AllocationFault(
+                f"KV pool exhausted at pool_slots_max={self.pool_slots_max} "
+                f"({p} slots bound, 0 free) and may not grow")
+        self.pool_slots = target
+        grown = target - p
         new = init_cache(self.cfg, self.params, self.pool_slots, self.max_len,
                          self.dtype, kv_dtype=self._kv_dtype_arg)
         # un-jitted on purpose: builds fresh (donation-safe) buffers
@@ -659,10 +778,10 @@ class JaxRealBackend(ExecutionBackend):
         for s in range(p, self.pool_slots):
             heapq.heappush(self._free, s)
         self._toks = jnp.concatenate(
-            [self._toks, jnp.zeros((p,), jnp.int32)])
-        self._mask = jnp.concatenate([self._mask, jnp.zeros((p,), bool)])
+            [self._toks, jnp.zeros((grown,), jnp.int32)])
+        self._mask = jnp.concatenate([self._mask, jnp.zeros((grown,), bool)])
         self._mask_host = np.concatenate(
-            [self._mask_host, np.zeros((p,), bool)])
+            [self._mask_host, np.zeros((grown,), bool)])
 
     def _alloc_slot(self, rid: int) -> int:
         """Bind the LOWEST free slot (min-heap): live rows stay compacted at
@@ -670,7 +789,11 @@ class JaxRealBackend(ExecutionBackend):
         (``next_pow2(high_water + 1)``, DESIGN.md §9) tracks occupancy
         instead of allocation history.  If the popped row still backs radix
         prefixes, they are promoted to the store FIRST — the row's buffers
-        are about to be reused (DESIGN.md §10)."""
+        are about to be reused (DESIGN.md §10).  Raises ``AllocationFault``
+        (injected, or real at ``pool_slots_max``) instead of ever binding a
+        row it does not have."""
+        if self._faults is not None:
+            self._faults.check("alloc", req_id=rid)
         if not self._free:
             self._grow_pool()
         slot = heapq.heappop(self._free)
@@ -721,7 +844,8 @@ class JaxRealBackend(ExecutionBackend):
             return
         depth_cap = _next_pow2(max(n.depth for n in nodes))
         fn = self._prefix_snap_fn(self.pool_slots, depth_cap)
-        entry_cache = fn(self._pool, self._jnp.int32(slot))
+        entry_cache = self._call(fn, self._pool, self._jnp.int32(slot),
+                                 stage="prefix_copy")
         eid = self._store_next
         self._store_next += 1
         self._store[eid] = {"cache": entry_cache, "cap": depth_cap,
@@ -746,8 +870,8 @@ class JaxRealBackend(ExecutionBackend):
         idx[:len(diff)] = diff
         val[:len(diff)] = want[diff]
         fn = self._mask_update_fn(self.pool_slots, k)
-        self._mask = fn(self._mask, self._jnp.asarray(idx),
-                        self._jnp.asarray(val))
+        self._mask = self._call(fn, self._mask, self._jnp.asarray(idx),
+                                self._jnp.asarray(val), stage="mask")
         self._mask_host = want
 
     # -- prefill --------------------------------------------------------------
@@ -775,8 +899,9 @@ class JaxRealBackend(ExecutionBackend):
             chunk = self._np.asarray(req.tokens[:, pos:pos + size],
                                      self._np.int32)
             fn = self._extend_fn(size)
-            nxt, self._scratch[rid] = fn(self.params, self._scratch[rid],
-                                         self._jnp.asarray(chunk))
+            nxt, self._scratch[rid] = self._call(
+                fn, self.params, self._scratch[rid],
+                self._jnp.asarray(chunk), rid=rid, stage="prefill")
             self.prefill_device_calls += 1
             pos += size
         self._scratch_pos[rid] = pos
@@ -847,8 +972,9 @@ class JaxRealBackend(ExecutionBackend):
                 self.prefix_fallbacks += 1
                 return 0
             fn = self._prefix_copy_fn(self.pool_slots, hit_cap)
-            self._pool = fn(self._pool, jnp.int32(ref), jnp.int32(dst),
-                            jnp.int32(hit))
+            self._pool = self._call(fn, self._pool, jnp.int32(ref),
+                                    jnp.int32(dst), jnp.int32(hit),
+                                    rid=req.id, stage="prefix_copy")
         else:
             entry = self._store.get(ref)
             if entry is None:
@@ -856,8 +982,9 @@ class JaxRealBackend(ExecutionBackend):
                 return 0
             fn = self._prefix_paste_fn(self.pool_slots, entry["cap"],
                                        min(hit_cap, entry["cap"]))
-            self._pool = fn(self._pool, entry["cache"], jnp.int32(dst),
-                            jnp.int32(hit))
+            self._pool = self._call(fn, self._pool, entry["cache"],
+                                    jnp.int32(dst), jnp.int32(hit),
+                                    rid=req.id, stage="prefix_copy")
         self.prefix_copy_device_calls += 1
         self.kv_bytes_prefix_copied += hit_cap * self._kv_token_bytes
         self._row_pos[req.id] = hit
@@ -903,10 +1030,10 @@ class JaxRealBackend(ExecutionBackend):
                                         kv_limit=_next_pow2(pos),
                                         fresh=fresh,
                                         emit=pos >= req.prompt_len)
-            nxt, self._toks, self._pool = fn(self.params, self._pool,
-                                             self._toks, buf,
-                                             jnp.int32(gstart),
-                                             jnp.int32(self._slot[rid]))
+            nxt, self._toks, self._pool = self._call(
+                fn, self.params, self._pool, self._toks, buf,
+                jnp.int32(gstart), jnp.int32(self._slot[rid]),
+                rid=rid, stage="prefill")
             self.prefill_device_calls += 1
             fresh = False
         self._row_pos[rid] = pos
@@ -929,18 +1056,53 @@ class JaxRealBackend(ExecutionBackend):
         if self.in_pool_prefill and req.tokens is not None:
             self._upload_prompt(req)
 
+    # -- per-flow fault isolation (DESIGN.md §12) -----------------------------
+    def _record_flow_fault(self, req: Request, exc: BaseException,
+                           stage: str) -> None:
+        """Park a flow-attributable failure for the scheduler's per-turn
+        poll: the flow is marked quarantined (its remaining hooks no-op)
+        and every OTHER flow's state — including buffered fused-run replay
+        rows — is untouched.  ``isolate_flow_faults=False`` restores the
+        pre-PR-8 raise-out teardown."""
+        self.flow_faults += 1
+        if not self.isolate_flow_faults:
+            raise exc
+        self._quarantined.add(req.id)
+        self._pending_faults.append(FlowFault(req, exc, stage))
+
+    def take_flow_faults(self) -> List[FlowFault]:
+        out, self._pending_faults = self._pending_faults, []
+        return out
+
+    def deadline_expired(self, req: Request, now: float) -> bool:
+        if self._faults is not None and \
+                self._faults.fires("deadline", req_id=req.id):
+            return True
+        return super().deadline_expired(req, now)
+
     def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
                       now: float) -> None:
-        if req.tokens is None:
+        if req.tokens is None or req.id in self._quarantined:
             return
-        if self.in_pool_prefill:
-            self._ensure_row_at(req, seq_start)
-            self._run_bucketed_in_pool(req, seq_start, tokens)
-        else:
-            self._ensure_scratch_at(req, seq_start)
-            self._run_bucketed(req, seq_start, tokens)
+        try:
+            if self.in_pool_prefill:
+                self._ensure_row_at(req, seq_start)
+                self._run_bucketed_in_pool(req, seq_start, tokens)
+            else:
+                self._ensure_scratch_at(req, seq_start)
+                self._run_bucketed(req, seq_start, tokens)
+        except FaultError as e:
+            self._record_flow_fault(req, e, "prefill")
 
     def prefill_done(self, req: Request, now: float) -> None:
+        if req.id in self._quarantined:
+            return
+        try:
+            self._prefill_done(req, now)
+        except FaultError as e:
+            self._record_flow_fault(req, e, "prefill")
+
+    def _prefill_done(self, req: Request, now: float) -> None:
         rid = req.id
         if self.in_pool_prefill:
             if req.tokens is None or rid not in self._slot:
@@ -970,9 +1132,10 @@ class JaxRealBackend(ExecutionBackend):
             slot = self._alloc_slot(rid)
             fn = self._bind_fn(self.pool_slots)
             first = self._first.pop(rid)
-            self._pool, self._toks = fn(self._pool, self._scratch.pop(rid),
-                                        self._jnp.int32(slot), self._toks,
-                                        self._jnp.int32(first))
+            self._pool, self._toks = self._call(
+                fn, self._pool, self._scratch.pop(rid),
+                self._jnp.int32(slot), self._toks, self._jnp.int32(first),
+                rid=rid, stage="prefill")
             self._scratch_pos.pop(rid, None)
             self.bind_device_calls += 1
             self.kv_bytes_prefill += self._bind_row_bytes
@@ -1005,7 +1168,8 @@ class JaxRealBackend(ExecutionBackend):
         (``request_preempt``) at a kernel boundary.  ``abortable_runs=False``
         executes the whole plan eagerly (one blocking launch chain, one host
         sync) — PR 2's behaviour, kept as the BENCH_reactive baseline."""
-        live = [r for r in reqs if r.id in self._slot]
+        live = [r for r in reqs if r.id in self._slot
+                and r.id not in self._quarantined]
         if not live or n_steps <= 1 or not self.device_resident:
             return
         slots = [self._slot[r.id] for r in live]
@@ -1064,8 +1228,9 @@ class JaxRealBackend(ExecutionBackend):
         for b in _pow2_buckets(n):
             rows, kvl = self._elastic_extent(slots, b)
             fn = self._decode_run_fn(self.pool_slots, b, rows, kvl)
-            block, self._toks, self._pool = fn(self.params, self._pool,
-                                               self._toks, self._mask)
+            block, self._toks, self._pool = self._call(
+                fn, self.params, self._pool, self._toks, self._mask,
+                stage="decode")
             self.decode_device_calls += 1
             self._account_decode(slots, b, rows, kvl)
             blocks.append(block)
@@ -1090,7 +1255,8 @@ class JaxRealBackend(ExecutionBackend):
                 self._fused_slots = None
 
     def decode_iteration(self, reqs: List[Request], now: float) -> None:
-        live = [r for r in reqs if r.id in self._slot]
+        live = [r for r in reqs if r.id in self._slot
+                and r.id not in self._quarantined]
         if not live:
             return
         if self._fused_rows or (self._fused_slots is not None
@@ -1116,7 +1282,8 @@ class JaxRealBackend(ExecutionBackend):
             toks, mask = self._jnp.asarray(toks_h), self._jnp.asarray(mask_h)
         rows, kvl = self._elastic_extent(slots, 1)
         fn = self._decode_fn(self.pool_slots, rows, kvl)
-        nxt, self._toks, self._pool = fn(self.params, self._pool, toks, mask)
+        nxt, self._toks, self._pool = self._call(
+            fn, self.params, self._pool, toks, mask, stage="decode")
         self.decode_device_calls += 1
         self._account_decode(slots, 1, rows, kvl)
         nxt = self._np.asarray(nxt)
@@ -1145,44 +1312,97 @@ class JaxRealBackend(ExecutionBackend):
             self._texts[r.id].append(t)
             self._emit(r, t)
 
-    def finish(self, req: Request, now: float) -> None:
-        # release everything except _texts (output_tokens() outlives the run)
-        slot = self._slot.pop(req.id, None)
+    def _drop_flow_state(self, rid: int) -> None:
+        """Free one flow's slot and host bookkeeping — shared by ``finish``
+        (normal retirement) and ``quarantine_flow`` (fault/deadline abort).
+        ``_texts`` survives on purpose: ``output_tokens()`` outlives the
+        run, so a failed flow's PARTIAL output stays retrievable."""
+        slot = self._slot.pop(rid, None)
         if slot is not None:
-            if self._fused_slots is not None and slot in self._fused_slots:
-                # a planned member vanished mid-run (release cut-off): the
-                # remaining buffered rows and unlaunched segments are stale
-                self._fused_rows.clear()
-                self._fused_slots = None
-                self._fused_left = 0
             # clear the slot's last-token / mask state so a stale token can
             # never leak into a future bind's first masked step
             fn = self._clear_fn(self.pool_slots)
-            self._toks, self._mask = fn(self._toks, self._mask,
-                                        self._jnp.int32(slot))
+            try:
+                self._toks, self._mask = self._call(
+                    fn, self._toks, self._mask, self._jnp.int32(slot),
+                    rid=rid, stage="finish")
+            except FaultError:
+                # an injected fault at the finish boundary fires BEFORE the
+                # launch, so forcing the clear through is a clean re-launch:
+                # slot reclamation must never leak on a cleanup fault
+                self.flow_faults += 1
+                self._toks, self._mask = fn(self._toks, self._mask,
+                                            self._jnp.int32(slot))
             self._mask_host[slot] = False
             self._slot_pos.pop(slot, None)
             heapq.heappush(self._free, slot)
-        self._last.pop(req.id, None)
-        self._scratch.pop(req.id, None)
-        self._scratch_pos.pop(req.id, None)
-        self._first.pop(req.id, None)
-        self._on_token.pop(req.id, None)
-        self._tok_dev.pop(req.id, None)
-        self._row_pos.pop(req.id, None)
-        self._nxt_dev.pop(req.id, None)
+        self._last.pop(rid, None)
+        self._scratch.pop(rid, None)
+        self._scratch_pos.pop(rid, None)
+        self._first.pop(rid, None)
+        self._on_token.pop(rid, None)
+        self._tok_dev.pop(rid, None)
+        self._row_pos.pop(rid, None)
+        self._nxt_dev.pop(rid, None)
         # release the consumer's prefix pin; the request's OWN donated
         # prefix (if indexed at prefill_done) outlives it — the freed row
         # keeps its KV until rebinding promotes the prefix to the store
-        self._hit.pop(req.id, None)
-        node = self._hit_node.pop(req.id, None)
+        self._hit.pop(rid, None)
+        node = self._hit_node.pop(rid, None)
         if node is not None and self._prefix is not None:
             self._prefix.unpin(node)
+
+    def finish(self, req: Request, now: float) -> None:
+        slot = self._slot.get(req.id)
+        if slot is not None and self._fused_slots is not None \
+                and slot in self._fused_slots:
+            # a planned member vanished mid-run (release cut-off): the
+            # remaining buffered rows and unlaunched segments are stale
+            self._fused_rows.clear()
+            self._fused_slots = None
+            self._fused_left = 0
+        self._quarantined.discard(req.id)
+        self._drop_flow_state(req.id)
+
+    def quarantine_flow(self, req: Request, now: float) -> None:
+        """Surgically retire ONE failed/expired flow (DESIGN.md §12).
+
+        Unlike ``finish`` on a fused-plan member — which declares the whole
+        replay buffer stale — quarantine cancels only the UNLAUNCHED
+        segments (the abort boundary) and removes the dead flow's slot from
+        the committed membership, keeping every survivor's buffered rows:
+        their KV has already advanced through those iterations, so dropping
+        the rows would desynchronize tokens from state.  The scheduler
+        mirrors this truncation on its plan (``_quarantine``)."""
+        rid = req.id
+        self._quarantined.discard(rid)
+        self._pending_faults = [f for f in self._pending_faults
+                                if f.req_id != rid]
+        slot = self._slot.get(rid)
+        if slot is not None and self._fused_slots is not None \
+                and slot in self._fused_slots:
+            if self._fused_left > 0:
+                # cancel unlaunched segments at the boundary (same
+                # accounting as request_preempt)
+                self.aborted_runs += 1
+                self.aborted_steps += self._fused_left
+                self._fused_left = 0
+            rest = self._fused_slots - {slot}
+            if rest and self._fused_rows:
+                self._fused_slots = rest  # survivors replay token-exactly
+            else:
+                self._fused_rows.clear()
+                self._fused_slots = None
+        self._drop_flow_state(rid)
+        self.quarantined_flows += 1
 
     def release(self, reqs: List[Request], now: float) -> None:
         """Free resources of requests cut off mid-flight (simulation hit
         max_time before they finished): their slot and scratch cache would
         otherwise stay bound across subsequent runs."""
+        dropped = {r.id for r in reqs}
+        self._pending_faults = [f for f in self._pending_faults
+                                if f.req_id not in dropped]
         for r in reqs:
             self.finish(r, now)
         self._fused_rows.clear()  # uncommitted fused tokens are dropped
@@ -1191,12 +1411,129 @@ class JaxRealBackend(ExecutionBackend):
 
     # -- output ----------------------------------------------------------------
     def _emit(self, req: Request, token: int):
+        """Per-token user-hook boundary.  With ``isolate_flow_faults`` (the
+        default) an exception from ONE flow's callback — or an injected
+        "hook" fault — is parked as a ``FlowFault`` for the scheduler's
+        per-turn poll instead of unwinding the event loop: the flow is
+        quarantined as ``failed`` while every other flow keeps streaming.
+        ``isolate_flow_faults=False`` restores the raise-out teardown."""
+        if req.id in self._quarantined:
+            return  # flow already faulted: suppress further emissions
         cb = self._on_token.get(req.id)
-        if cb is not None:
-            cb(req, token)
+        try:
+            if self._faults is not None:
+                self._faults.check("hook", req_id=req.id)
+            if cb is not None:
+                cb(req, token)
+        except Exception as e:
+            self._record_flow_fault(req, e, "hook")
 
     def output_tokens(self, req_id: int) -> list:
         return self._texts.get(req_id, [])
+
+    # -- bounded-resource accounting (DESIGN.md §12) --------------------------
+    def kv_store_rows(self) -> int:
+        return len(self._store)
+
+    def evict_prefix_leaves(self) -> int:
+        """Degradation-ladder rung 1: under admission pressure the prefix
+        cache is ballast — force-evict every unpinned node and drop its
+        physical source.  Off-pool snapshot entries whose last node departs
+        are freed (real KV rows back); donor-slot sources merely unlink
+        (the pool row belongs to the free list / its flow regardless)."""
+        if self._prefix is None:
+            return 0
+        before = len(self._store)
+        nodes = self._prefix.evict_unpinned()
+        for n in nodes:
+            self._set_source(n, None)
+        self.pressure_evicted_nodes += len(nodes)
+        return before - len(self._store)
+
+    def validate(self, strict: bool = False) -> List[str]:
+        """Invariant catalogue (DESIGN.md §12): audits the accounting that
+        every failure path must preserve.  O(pool + index) host work, no
+        device sync — cheap enough to run after every event-loop turn
+        under ``REPRO_STRICT_INVARIANTS=1``."""
+        problems: List[str] = []
+        free = list(self._free)
+        bound = dict(self._slot)
+        # 1. the free heap holds unique, in-range, unbound slots
+        if len(set(free)) != len(free):
+            problems.append(f"free heap has duplicates: {sorted(free)}")
+        if any(s < 0 or s >= self.pool_slots for s in free):
+            problems.append(f"free heap out of range: {sorted(free)}")
+        overlap = set(free) & set(bound.values())
+        if overlap:
+            problems.append(f"slots both free and bound: {sorted(overlap)}")
+        # 2. conservation: every pool slot is exactly free or bound
+        if len(free) + len(bound) != self.pool_slots:
+            problems.append(
+                f"slot leak: {len(free)} free + {len(bound)} bound "
+                f"!= {self.pool_slots} pool slots")
+        # 3. per-slot live state only exists for bound slots
+        stale_pos = set(self._slot_pos) - set(bound.values())
+        if stale_pos:
+            problems.append(f"_slot_pos for unbound slots: "
+                            f"{sorted(stale_pos)}")
+        stale_mask = [s for s in range(self.pool_slots)
+                      if self._mask_host[s] and s not in bound.values()]
+        if stale_mask:
+            problems.append(f"mask set for unbound slots: {stale_mask}")
+        # 4. committed fused membership covers only bound slots
+        if self._fused_slots is not None:
+            ghost = set(self._fused_slots) - set(bound.values())
+            if ghost:
+                problems.append(f"fused plan over unbound slots: "
+                                f"{sorted(ghost)}")
+        # 5. prefix accounting: node sources, store refcounts, pins
+        if self._prefix is not None:
+            refs: Dict[int, int] = {}
+            stack = [self._prefix.root]
+            while stack:
+                nd = stack.pop()
+                stack.extend(nd.children.values())
+                src = nd.source
+                if src is None:
+                    continue
+                kind, ref = src
+                if kind == "slot":
+                    if nd not in self._slot_nodes.get(ref, set()):
+                        problems.append(
+                            f"node {nd.nid} claims slot {ref} but is not "
+                            f"in _slot_nodes")
+                else:
+                    if ref not in self._store:
+                        problems.append(
+                            f"node {nd.nid} references dropped store "
+                            f"entry {ref}")
+                    refs[ref] = refs.get(ref, 0) + 1
+            for eid, entry in self._store.items():
+                if entry["refs"] != refs.get(eid, 0):
+                    problems.append(
+                        f"store entry {eid} refcount {entry['refs']} != "
+                        f"{refs.get(eid, 0)} referencing nodes")
+                if entry["refs"] <= 0:
+                    problems.append(f"store entry {eid} kept at refs<=0")
+            # consumer pins: every pinned node's refs equals its pin count
+            pins: Dict[int, int] = {}
+            by_id: Dict[int, object] = {}
+            for node in self._hit_node.values():
+                pins[id(node)] = pins.get(id(node), 0) + 1
+                by_id[id(node)] = node
+            for key, n_pins in pins.items():
+                node = by_id[key]
+                if node.refs != n_pins:
+                    problems.append(
+                        f"node {node.nid} refs {node.refs} != {n_pins} "
+                        f"in-flight consumer pins")
+            if set(self._hit) != set(self._hit_node):
+                problems.append(
+                    f"hit/hit_node key mismatch: {sorted(self._hit)} vs "
+                    f"{sorted(self._hit_node)}")
+        if strict and problems:
+            raise InvariantViolation("; ".join(problems))
+        return problems
 
     def stats(self) -> dict:
         return {"jit_compilations": self.jit_compilations,
@@ -1215,6 +1552,15 @@ class JaxRealBackend(ExecutionBackend):
                 "decode_kv_limit": self.decode_kv_limit,
                 "kv_bytes_decode": self.kv_bytes_decode,
                 "pool_slots": self.pool_slots,
+                # bounded-resource failure model (DESIGN.md §12)
+                "pool_slots_max": self.pool_slots_max,
+                "free_slots": len(self._free),
+                "device_fault_retries": self.device_fault_retries,
+                "flow_faults": self.flow_faults,
+                "quarantined_flows": self.quarantined_flows,
+                "pressure_evicted_nodes": self.pressure_evicted_nodes,
+                **(self._faults.stats() if self._faults is not None
+                   else {}),
                 "kv_dtype": self.kv_dtype,
                 "kernel_backend": self.kernel_backend,
                 "quant_scale_bytes": self.quant_scale_bytes,

@@ -27,10 +27,13 @@ class FCFSScheduler(SchedulerBase):
         super().__init__(heg, b_max=1, **kw)
         self.fifo: deque = deque()
 
-    def on_arrival(self, req: Request, now: float):
+    def _enqueue(self, req: Request, now: float):
+        # admission (the base on_arrival ladder) still applies; only the
+        # queueing discipline differs
         c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
+        req.last_enqueue_t = now
         self.fifo.append(req.id)
 
     def next_dispatch(self, now: float) -> List[RunningKernel]:
@@ -60,8 +63,8 @@ class NaivePreemptScheduler(SchedulerBase):
     name = "naive_preempt"
     lanes = ("igpu",)
 
-    def on_arrival(self, req: Request, now: float):
-        super().on_arrival(req, now)
+    def _enqueue(self, req: Request, now: float):
+        super()._enqueue(req, now)
         if req.priority == Priority.REACTIVE:
             rk = self.running["igpu"]
             if rk is not None and not rk.is_decode_batch:
@@ -103,8 +106,8 @@ class TimeShareScheduler(SchedulerBase):
         super().__init__(heg, b_max=1, **kw)
         self.rr: deque = deque()
 
-    def on_arrival(self, req: Request, now: float):
-        super().on_arrival(req, now)
+    def _enqueue(self, req: Request, now: float):
+        super()._enqueue(req, now)
         self.rr.append(req.id)
 
     def next_dispatch(self, now: float) -> List[RunningKernel]:
@@ -137,10 +140,11 @@ class ContinuousBatchingScheduler(SchedulerBase):
         super().__init__(heg, b_max=b_max, **kw)
         self.wait: deque = deque()
 
-    def on_arrival(self, req: Request, now: float):
+    def _enqueue(self, req: Request, now: float):
         c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
+        req.last_enqueue_t = now
         self.wait.append(req.id)
 
     def next_dispatch(self, now: float) -> List[RunningKernel]:

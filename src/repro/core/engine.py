@@ -14,6 +14,7 @@ drives two device submeshes (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import os
 from typing import List, Optional
 
 from repro.configs.base import ModelConfig
@@ -21,7 +22,7 @@ from repro.core.annotation import (HardwareProfile, INTEL_CORE_ULTRA_5_125H)
 from repro.core.backend import ExecutionBackend, TokenCallback
 from repro.core.baselines import BASELINES
 from repro.core.heg import HEG
-from repro.core.requests import Request
+from repro.core.requests import Priority, Request
 from repro.core.scheduler import AgentXpuScheduler, SchedulerBase
 from repro.core.simulator import Simulator, SimMetrics
 
@@ -46,6 +47,7 @@ class AgentXPUEngine:
     """Simulation-mode engine: offline HEG + online scheduling over a trace."""
 
     backend: Optional[ExecutionBackend] = None  # None -> per-run SimBackend
+    _strict_invariants: bool = False  # audit slot accounting every turn
 
     def __init__(self, cfg: ModelConfig,
                  hw: HardwareProfile = INTEL_CORE_ULTRA_5_125H,
@@ -63,8 +65,22 @@ class AgentXPUEngine:
     def _run(self, requests: List[Request], max_time: float) -> SimMetrics:
         sched = make_scheduler(self.scheduler_name, self.heg,
                                backend=self.backend, **self.sched_kw)
-        sim = Simulator(sched, requests, max_time=max_time,
-                        poll=self._arrival_poll)
+        # per-turn poll composition (DESIGN.md §12), in order: (1) the
+        # scheduler quarantines parked backend faults / expired deadlines
+        # and drains the admission queue, (2) the strict-invariant audit
+        # proves slot accounting is clean AFTER those reclamations, (3) the
+        # arrival source sees the freed capacity
+        arrival = self._arrival_poll
+        strict = self._strict_invariants
+        backend = sched.backend
+
+        def poll(now: float):
+            sched.on_turn(now)
+            if strict:
+                backend.validate(strict=True)
+            if arrival is not None:
+                arrival(now)
+        sim = Simulator(sched, requests, max_time=max_time, poll=poll)
         self._sim = sim
         try:
             metrics = sim.run()
@@ -106,14 +122,24 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  prefix_cache_tokens: Optional[int] = None,
                  kv_dtype: str = "bf16",
                  kernel_backend: str = "xla",
+                 pool_slots_max: Optional[int] = None,
+                 admission_queue_len: int = 8,
+                 deadline_s: Optional[float] = None,
+                 isolate_flow_faults: bool = True,
+                 strict_invariants: Optional[bool] = None,
+                 faults=None,
                  **sched_kw):
         # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
         # the scheduler's plan-truncation arithmetic must mirror the
-        # backend's lazy segment launches (DESIGN.md §8)
+        # backend's lazy segment launches (DESIGN.md §8).  pool_slots_max
+        # likewise: the scheduler's admission ladder and the backend's
+        # AllocationFault backstop enforce the same cap (§12).
         super().__init__(cfg, hw, scheduler,
                          max_fused_steps=max_fused_steps,
                          abortable_runs=abortable_runs,
                          decode_segment_steps=decode_segment_steps,
+                         pool_slots_max=pool_slots_max,
+                         admission_queue_len=admission_queue_len,
                          **sched_kw)
         from repro.core.backend import JaxRealBackend
         self.backend = JaxRealBackend(
@@ -128,7 +154,18 @@ class RealAgentXPUEngine(AgentXPUEngine):
             prefix_cache_tokens=prefix_cache_tokens,
             # int8 KV pool / Pallas attention kernels (DESIGN.md §11);
             # bf16+xla is the exactness baseline every trace test pins
-            kv_dtype=kv_dtype, kernel_backend=kernel_backend)
+            kv_dtype=kv_dtype, kernel_backend=kernel_backend,
+            # failure model (DESIGN.md §12): bounded pool, per-flow fault
+            # quarantine, deterministic fault injection
+            pool_slots_max=pool_slots_max,
+            isolate_flow_faults=isolate_flow_faults, faults=faults)
+        # default SLO for human-facing flows: reactive requests submitted
+        # without their own deadline inherit this (seconds from arrival)
+        self.deadline_s = deadline_s
+        if strict_invariants is None:
+            strict_invariants = bool(os.environ.get(
+                "REPRO_STRICT_INVARIANTS", "") not in ("", "0"))
+        self._strict_invariants = strict_invariants
         self._pending: List[Request] = []
         self._live: List[Request] = []  # everything owned by the active run
 
@@ -143,6 +180,9 @@ class RealAgentXPUEngine(AgentXPUEngine):
         before any later event, and a committed fused decode run is
         truncated at the next segment boundary if the request is
         reactive)."""
+        if req.deadline is None and self.deadline_s is not None \
+                and req.priority == Priority.REACTIVE:
+            req.deadline = self.deadline_s
         self.backend.register(req, on_token)
         if self._sim is not None:
             req.arrival_time = max(req.arrival_time, self._sim.now)
@@ -182,10 +222,14 @@ class RealAgentXPUEngine(AgentXPUEngine):
         try:
             metrics = self._run(reqs, max_time)
         except BaseException:
-            # a user hook (arrival source, on_token callback, mid-run
-            # submit) raised out of the live event loop: free every slot
-            # the failed run may still hold — leaking them would shrink
-            # the pool for all subsequent runs on this engine
+            # with isolate_flow_faults=True (default) an on_token hook
+            # exception quarantines only its own flow (DESIGN.md §12) and
+            # never reaches here; this path now covers arrival-source
+            # raises and the legacy isolate_flow_faults=False mode, where
+            # a hook raise still tears the run down — either way, free
+            # every slot the failed run may still hold (leaking them would
+            # shrink the pool for all subsequent runs on this engine).
+            # Partial outputs stay retrievable via ``output_tokens``.
             self.backend.release(self._live, 0.0)
             self._live = []
             raise

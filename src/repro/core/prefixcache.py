@@ -235,6 +235,34 @@ class PrefixCache:
             out.append(victim)
         return out
 
+    def evict_unpinned(self) -> List[PrefixNode]:
+        """Forced pressure eviction (degradation-ladder rung 1, DESIGN.md
+        §12): drop EVERY evictable node — unpinned leaves first, then the
+        parents their departure exposes — regardless of the token budget.
+        Pinned nodes (in-flight consumers) and their ancestors survive, so
+        no live flow loses its KV source.  Returns the evicted nodes; the
+        caller drops their physical sources (freeing off-pool store rows)."""
+        out: List[PrefixNode] = []
+        while True:
+            batch: List[PrefixNode] = []
+            stack = [self.root]
+            while stack:
+                nd = stack.pop()
+                for c in nd.children.values():
+                    if c.children:
+                        stack.append(c)
+                    elif c.refs == 0:
+                        batch.append(c)
+            if not batch:
+                return out
+            for victim in batch:
+                del victim.parent.children[victim.key[0]]
+                victim.parent = None
+                self.size_tokens -= len(victim.key)
+                self.evictions += 1
+                self.evicted_tokens += len(victim.key)
+                out.append(victim)
+
     # -- introspection --------------------------------------------------------
     def __len__(self) -> int:
         """Number of indexed nodes (excluding the root)."""

@@ -30,6 +30,16 @@ class ReqState(enum.Enum):
     PREEMPTED = "preempted"
     DECODE = "decode"
     DONE = "done"
+    # terminal failure lattice (DESIGN.md §12): every request retires in
+    # exactly one of DONE / FAILED / TIMED_OUT / REJECTED — never by an
+    # unhandled exception tearing down the run
+    FAILED = "failed"  # quarantined: hook raised / backend fault
+    TIMED_OUT = "timed_out"  # deadline expired at a segment boundary
+    REJECTED = "rejected"  # admission ladder exhausted (AdmissionRejected)
+
+
+TERMINAL_STATES = (ReqState.DONE, ReqState.FAILED, ReqState.TIMED_OUT,
+                   ReqState.REJECTED)
 
 
 @dataclasses.dataclass
@@ -40,8 +50,12 @@ class Request:
     max_new_tokens: int
     arrival_time: float
     tokens: Optional[object] = None  # real-mode prompt ids (B=1 row)
+    # optional SLO deadline in seconds RELATIVE to arrival: an expired flow
+    # is aborted at the next segment boundary with TIMED_OUT (DESIGN.md §12)
+    deadline: Optional[float] = None
     # -- runtime bookkeeping ------------------------------------------------
     state: ReqState = ReqState.QUEUED
+    fault: Optional[str] = None  # cause of FAILED/TIMED_OUT/REJECTED
     prefill_done_t: Optional[float] = None  # TTFT timestamp
     finish_t: Optional[float] = None
     decoded: int = 0
@@ -66,6 +80,16 @@ class Request:
     def e2e_latency(self) -> Optional[float]:
         return None if self.finish_t is None else \
             self.finish_t - self.arrival_time
+
+    @property
+    def terminal_status(self) -> Optional[str]:
+        """``completed / failed / timed_out / rejected`` once retired,
+        else ``None`` (still in flight)."""
+        if self.state == ReqState.DONE:
+            return "completed"
+        if self.state in TERMINAL_STATES:
+            return self.state.value
+        return None
 
 
 # -- dataset-like length distributions (lognormal; mean/std in tokens) ------

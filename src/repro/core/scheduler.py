@@ -21,6 +21,7 @@ from typing import Dict, List, Optional
 
 from repro.core.backend import ExecutionBackend, SimBackend
 from repro.core.contention import MemoryPressureEstimator
+from repro.core.faults import AdmissionRejected
 from repro.core.heg import HEG, HEGNode, KernelKind
 from repro.core.preemption import ReqContext
 from repro.core.requests import Priority, ReqState, Request
@@ -52,7 +53,9 @@ class SchedulerBase:
     def __init__(self, heg: HEG, *, b_max: Optional[int] = None,
                  backend: Optional[ExecutionBackend] = None,
                  max_fused_steps: int = 32, abortable_runs: bool = True,
-                 decode_segment_steps: int = 8):
+                 decode_segment_steps: int = 8,
+                 pool_slots_max: Optional[int] = None,
+                 admission_queue_len: int = 8):
         self.heg = heg
         self.hw = heg.hw
         self.rt_queue: deque = deque()  # reactive req ids
@@ -83,6 +86,26 @@ class SchedulerBase:
         self.decode_segment_steps = max(int(decode_segment_steps), 1)
         # {"order": tuple, "left": n, "total": n_announced}
         self._fused_plan: Optional[dict] = None
+        # bounded-resource admission (DESIGN.md §12): ``pool_slots_max``
+        # caps occupancy = live flows + off-pool KV snapshot rows; at
+        # saturation arrivals walk the degradation ladder (evict -> shrink
+        # -> defer -> reject) instead of growing the pool without bound.
+        self.pool_slots_max = None if pool_slots_max is None \
+            else max(int(pool_slots_max), 1)
+        self.admission_queue_len = max(int(admission_queue_len), 0)
+        self._admission_wait: deque = deque()  # rung-3 bounded wait queue
+        self._base_max_fused = self.max_fused_steps  # rung-2 restore target
+        self.rejected: List[Request] = []
+        # failure-model counters (surface through launcher reports)
+        self.admission_deferrals = 0
+        self.admission_rejections = 0
+        self.pressure_evictions = 0
+        self.horizon_shrinks = 0
+        self.deadline_aborts = 0
+        self.fault_quarantines = 0
+        # rung firings in order ("evict"/"shrink"/"defer"/"reject") — the
+        # chaos suite asserts the ladder is walked top-down
+        self.ladder_events: List[str] = []
 
     # -- request lifecycle ---------------------------------------------------
     def _build_ctx(self, req: Request) -> ReqContext:
@@ -95,6 +118,15 @@ class SchedulerBase:
         return ReqContext.build(req, self.heg, start_tok=req.prefix_hit)
 
     def on_arrival(self, req: Request, now: float):
+        if not self._admit(req, now):
+            return
+        self._enqueue(req, now)
+
+    def _enqueue(self, req: Request, now: float):
+        """Actually start tracking an ADMITTED request.  Policy subclasses
+        override this (not ``on_arrival``) for arrival side effects such as
+        reactive preemption, so a deferred or rejected arrival never
+        perturbs the running flows."""
         c = self._build_ctx(req)
         self.ctx[req.id] = c
         req.state = ReqState.QUEUED
@@ -103,6 +135,177 @@ class SchedulerBase:
             self.rt_queue.append(req.id)
         else:
             self.be_queue.append(req.id)
+
+    # -- admission control (DESIGN.md §12) -----------------------------------
+    def _occupancy(self) -> int:
+        """KV-slot pressure: live flows (each owns / will own a pool slot)
+        plus off-pool prefix-snapshot rows (same HBM budget).  The sim
+        backend reports 0 store rows, so sim occupancy is just ctx size."""
+        return len(self.ctx) + self.backend.kv_store_rows()
+
+    def _admit(self, req: Request, now: float) -> bool:
+        """Degradation ladder.  Uncapped schedulers admit everything (the
+        pre-§12 behavior).  At saturation, each rung sheds load before the
+        next is tried: (1) evict unpinned prefix-cache leaves, (2) halve
+        the fused/piggyback horizon down to one abort segment, (3) defer to
+        the bounded wait queue, (4) typed rejection — never an unhandled
+        exception, never silent pool growth."""
+        cap = self.pool_slots_max
+        if cap is None:
+            return True
+        self._drain_admission(now)  # FIFO fairness: earlier deferrals first
+        if self._occupancy() < cap:
+            return True
+        # rung 1: drop evictable prefix-cache state (frees snapshot rows)
+        self.backend.evict_prefix_leaves()
+        self.pressure_evictions += 1
+        self.ladder_events.append("evict")
+        if self._occupancy() < cap:
+            return True
+        # rung 2: shrink the fused horizon so committed runs release the
+        # device — and their finishing members' slots — sooner
+        if self.max_fused_steps > self.decode_segment_steps:
+            self.max_fused_steps = max(self.decode_segment_steps,
+                                       self.max_fused_steps // 2)
+            self.horizon_shrinks += 1
+            self.ladder_events.append("shrink")
+            self._abort_fused_plan(now)
+        # rung 3: bounded deferral (reactive jumps the line)
+        if len(self._admission_wait) < self.admission_queue_len:
+            self._defer(req, now)
+            return False
+        if req.priority == Priority.REACTIVE:
+            # a full queue must not wedge the human-facing flow behind
+            # proactive deferrals: bump the youngest proactive instead
+            for i in range(len(self._admission_wait) - 1, -1, -1):
+                if self._admission_wait[i].priority == Priority.PROACTIVE:
+                    victim = self._admission_wait[i]
+                    del self._admission_wait[i]
+                    self._reject(victim, now)
+                    self._defer(req, now)
+                    return False
+        # rung 4: typed terminal rejection
+        self._reject(req, now)
+        return False
+
+    def _defer(self, req: Request, now: float):
+        self.admission_deferrals += 1
+        self.ladder_events.append("defer")
+        req.state = ReqState.QUEUED
+        req.last_enqueue_t = now
+        if req.priority == Priority.REACTIVE:
+            self._admission_wait.appendleft(req)
+        else:
+            self._admission_wait.append(req)
+
+    def _reject(self, req: Request, now: float):
+        self.admission_rejections += 1
+        self.ladder_events.append("reject")
+        self.rejected.append(req)
+        self._retire(req, now, ReqState.REJECTED, str(AdmissionRejected(
+            f"pool saturated: occupancy {self._occupancy()} >= "
+            f"pool_slots_max {self.pool_slots_max} and wait queue full")))
+
+    def _retire(self, req: Request, now: float, state: ReqState,
+                cause: str):
+        """Terminal retirement for a request that never entered ``ctx``
+        (rejected at admission, or expired while deferred).  The backend
+        may hold register-time prompt state for it, so ``finish`` runs."""
+        req.state = state
+        req.fault = cause
+        req.finish_t = now
+        self.done.append(req)
+        self.backend.finish(req, now)
+
+    def _drain_admission(self, now: float):
+        """Re-admit deferred requests while capacity lasts; once the queue
+        clears, restore the fused horizon one doubling per call (no
+        whiplash under bursts)."""
+        cap = self.pool_slots_max
+        if cap is None:
+            return
+        while self._admission_wait and self._occupancy() < cap:
+            req = self._admission_wait.popleft()
+            if self.backend.deadline_expired(req, now):
+                self.deadline_aborts += 1
+                self._retire(req, now, ReqState.TIMED_OUT,
+                             "deadline expired while deferred at admission")
+                continue
+            self._enqueue(req, now)
+        if not self._admission_wait and self._occupancy() < cap \
+                and self.max_fused_steps < self._base_max_fused:
+            self.max_fused_steps = min(self._base_max_fused,
+                                       self.max_fused_steps * 2)
+
+    # -- per-turn poll: fault quarantine + deadlines (DESIGN.md §12) ---------
+    def on_turn(self, now: float):
+        """Driven once per event-loop turn (Simulator ``poll``).  Order
+        matters: parked backend faults quarantine first (their flows must
+        not be charged a deadline miss for a fault), then expired deadlines
+        abort at the segment boundary, then freed capacity re-admits."""
+        for f in self.backend.take_flow_faults():
+            c = self.ctx.get(f.req_id)
+            if c is not None:
+                self._quarantine(c.req, now, ReqState.FAILED,
+                                 f"{f.stage}: {f.cause!r}")
+            else:
+                # flow already retired between fault and poll: idempotent
+                # backend cleanup only, its terminal status stands
+                self.backend.quarantine_flow(f.req, now)
+        for rid in list(self.ctx):
+            c = self.ctx.get(rid)
+            if c is not None and self.backend.deadline_expired(c.req, now):
+                self._quarantine(
+                    c.req, now, ReqState.TIMED_OUT,
+                    f"deadline {c.req.deadline}s exceeded at t={now:.3f}")
+        if self._admission_wait:
+            keep: deque = deque()
+            for r in self._admission_wait:
+                if self.backend.deadline_expired(r, now):
+                    self.deadline_aborts += 1
+                    self._retire(r, now, ReqState.TIMED_OUT,
+                                 "deadline expired while deferred at "
+                                 "admission")
+                else:
+                    keep.append(r)
+            self._admission_wait = keep
+        self._drain_admission(now)
+
+    def _quarantine(self, req: Request, now: float, state: ReqState,
+                    cause: str):
+        """Remove ONE flow from every scheduler structure and reclaim its
+        backend state while all other flows keep running.  A quarantined
+        fused-plan member is excised from the committed membership with the
+        same segment-boundary arithmetic as ``_abort_fused_plan``, which is
+        exactly what ``backend.quarantine_flow`` does to its replay buffer
+        — survivors' buffered iterations still commit token-exactly."""
+        rid = req.id
+        if self.ctx.pop(rid, None) is None:
+            return  # already retired
+        if rid in self.decode_ready:
+            self.decode_ready.remove(rid)
+        plan = self._fused_plan
+        if plan is not None and rid in plan["order"]:
+            if self.abortable_runs:
+                seg = self.decode_segment_steps
+                committed = plan["total"] - plan["left"]
+                executed = min(plan["total"],
+                               seg * max(1, -(-committed // seg)))
+                plan["left"] = executed - committed
+                plan["total"] = executed
+            plan["order"] = tuple(o for o in plan["order"] if o != rid)
+            if not plan["order"] or plan["left"] <= 0:
+                self._fused_plan = None
+        req.state = state
+        req.fault = cause
+        req.finish_t = now
+        self.done.append(req)
+        self.backend.quarantine_flow(req, now)
+        if state == ReqState.TIMED_OUT:
+            self.deadline_aborts += 1
+        else:
+            self.fault_quarantines += 1
+        self._drain_admission(now)
 
     def _finish_prefill(self, req: Request, now: float):
         req.prefill_done_t = now
@@ -127,6 +330,7 @@ class SchedulerBase:
         self.done.append(req)
         self.ctx.pop(req.id, None)
         self.backend.finish(req, now)
+        self._drain_admission(now)  # freed slot -> re-admit deferrals
 
     def on_complete(self, rk: RunningKernel, now: float):
         self.running[rk.lane] = None
@@ -293,11 +497,15 @@ class AgentXpuScheduler(SchedulerBase):
                  reactive_offload: bool = True,
                  backend: Optional[ExecutionBackend] = None,
                  max_fused_steps: int = 32, abortable_runs: bool = True,
-                 decode_segment_steps: int = 8):
+                 decode_segment_steps: int = 8,
+                 pool_slots_max: Optional[int] = None,
+                 admission_queue_len: int = 8):
         super().__init__(heg, b_max=b_max, backend=backend,
                          max_fused_steps=max_fused_steps,
                          abortable_runs=abortable_runs,
-                         decode_segment_steps=decode_segment_steps)
+                         decode_segment_steps=decode_segment_steps,
+                         pool_slots_max=pool_slots_max,
+                         admission_queue_len=admission_queue_len)
         self.enable_backfill = enable_backfill
         self.enable_contention = enable_contention
         self.tau_low = tau_low
@@ -534,8 +742,10 @@ class AgentXpuScheduler(SchedulerBase):
         self._abort_fused_plan(now)
 
     # -- preemption (kernel boundary; §6.2) -----------------------------------
-    def on_arrival(self, req: Request, now: float):
-        super().on_arrival(req, now)
+    def _enqueue(self, req: Request, now: float):
+        # _enqueue (not on_arrival) so a deferred/rejected arrival cannot
+        # preempt or truncate work it will never displace
+        super()._enqueue(req, now)
         if req.priority == Priority.REACTIVE:
             # mark running best-effort prefill as preempted; their current
             # kernel completes (no mid-kernel abort), context checkpointed

@@ -15,7 +15,7 @@ import itertools
 from typing import Dict, List, Optional
 
 from repro.core.contention import co_execution_rates
-from repro.core.requests import Priority, Request
+from repro.core.requests import Priority, ReqState, Request
 from repro.core.scheduler import SchedulerBase
 
 
@@ -27,15 +27,31 @@ class SimMetrics:
     lane_busy: Dict[str, float]
 
     def _lat(self, prio, fn):
+        # latency aggregates cover COMPLETED flows only: a quarantined /
+        # timed-out / rejected flow's partial timestamps would skew the
+        # paper metrics (its fate is reported via the status counts below)
         vals = [fn(r) for r in self.completed
-                if r.priority == prio and fn(r) is not None]
+                if r.priority == prio and r.state == ReqState.DONE
+                and fn(r) is not None]
         return sum(vals) / len(vals) if vals else None
 
     def summary(self) -> dict:
-        rs = [r for r in self.completed if r.priority == Priority.REACTIVE]
-        ps = [r for r in self.completed if r.priority == Priority.PROACTIVE]
+        ok = [r for r in self.completed if r.state == ReqState.DONE]
+        rs = [r for r in ok if r.priority == Priority.REACTIVE]
+        ps = [r for r in ok if r.priority == Priority.PROACTIVE]
         tokens = sum(r.decoded for r in self.completed)
+        statuses = {"completed": 0, "failed": 0, "timed_out": 0,
+                    "rejected": 0}
+        for r in self.completed:
+            s = r.terminal_status
+            if s is not None:
+                statuses[s] += 1
         return {
+            # terminal-status lattice (DESIGN.md §12)
+            "n_completed": statuses["completed"],
+            "n_failed": statuses["failed"],
+            "n_timed_out": statuses["timed_out"],
+            "n_rejected": statuses["rejected"],
             "reactive_norm_latency":
                 self._lat(Priority.REACTIVE, lambda r: r.normalized_latency),
             "reactive_ttft": self._lat(Priority.REACTIVE, lambda r: r.ttft),
@@ -143,6 +159,13 @@ class Simulator:
             if self.poll is not None:
                 self.poll(self.now)  # may inject() new arrivals
             if not self._heap:
+                # the poll may have freed capacity (quarantine, deadline
+                # abort) and drained the admission wait queue: give the
+                # scheduler one dispatch chance before declaring the run
+                # over, else an admitted-at-drain flow would stall forever
+                if self.sched.next_dispatch(self.now):
+                    self._schedule_completions()
+                    continue
                 break
             t, _, kind, payload = heapq.heappop(self._heap)
             if kind == "done":

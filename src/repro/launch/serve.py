@@ -83,6 +83,29 @@ def main(argv=None):
                          "runs the pool-native decode/prefill kernels "
                          "(interpret mode off-TPU); xla is the lowered "
                          "reference — both serve identical tokens")
+    ap.add_argument("--pool-slots-max", type=int, default=None,
+                    help="hard cap on KV occupancy (live flows + prefix "
+                         "snapshot rows).  At saturation arrivals walk the "
+                         "degradation ladder — evict unpinned prefix "
+                         "leaves, shrink the fused horizon, defer to a "
+                         "bounded queue, reject (DESIGN.md §12); default: "
+                         "unbounded (pool doubles on demand)")
+    ap.add_argument("--admission-queue-len", type=int, default=8,
+                    help="bounded admission wait-queue length (ladder "
+                         "rung 3); only meaningful with --pool-slots-max")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="SLO deadline for REACTIVE requests in ms from "
+                         "arrival; an expired flow is aborted at the next "
+                         "segment boundary with status timed_out")
+    ap.add_argument("--no-isolate-flow-faults", action="store_true",
+                    help="with --real: legacy fault handling — an on_token "
+                         "hook exception tears down the whole run instead "
+                         "of quarantining just the faulting flow")
+    ap.add_argument("--strict-invariants", action="store_true",
+                    help="with --real: audit slot/refcount/pin accounting "
+                         "after every event-loop turn and raise "
+                         "InvariantViolation on any leak (also via "
+                         "REPRO_STRICT_INVARIANTS=1)")
     ap.add_argument("--system-prompt-len", type=int, default=32,
                     help="with --real: shared system-prompt tokens "
                          "prepended to every prompt (agentic flows share "
@@ -129,7 +152,13 @@ def main(argv=None):
             in_pool_prefill=False if args.no_in_pool_prefill else None,
             elastic_decode=not args.no_elastic_decode,
             prefix_cache=not args.no_prefix_cache,
-            kv_dtype=args.kv_dtype, kernel_backend=args.kernel_backend)
+            kv_dtype=args.kv_dtype, kernel_backend=args.kernel_backend,
+            pool_slots_max=args.pool_slots_max,
+            admission_queue_len=args.admission_queue_len,
+            deadline_s=None if args.deadline_ms is None
+            else args.deadline_ms / 1000.0,
+            isolate_flow_faults=not args.no_isolate_flow_faults,
+            strict_invariants=True if args.strict_invariants else None)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -163,19 +192,43 @@ def main(argv=None):
                   f"{st['kv_bytes_prefix_copied']} KV bytes copied, "
                   f"{st['prefix_store_entries']} store entries, "
                   f"{st['prefix_promotions']} donor promotions")
+            cap = st["pool_slots_max"]
+            print(f"[real] failure model: pool cap "
+                  f"{'unbounded' if cap is None else cap} "
+                  f"({st['free_slots']} slots free at exit), "
+                  f"{st['flow_faults']} flow faults "
+                  f"({st['quarantined_flows']} quarantined), "
+                  f"{st['device_fault_retries']} transient device retries, "
+                  f"{st['pressure_evicted_nodes']} pressure-evicted "
+                  f"prefix nodes")
     else:
         from repro.core.backend import SimBackend
         cfg = get_config(args.arch)
+        if args.deadline_ms is not None:
+            for r in reqs:
+                if r.priority.name == "REACTIVE" and r.deadline is None:
+                    r.deadline = args.deadline_ms / 1000.0
         eng = AgentXPUEngine(cfg, hw=PROFILES[args.hw],
                              scheduler=args.scheduler,
                              abortable_runs=not args.no_abortable_runs,
-                             decode_segment_steps=args.decode_segment_steps)
+                             decode_segment_steps=args.decode_segment_steps,
+                             pool_slots_max=args.pool_slots_max,
+                             admission_queue_len=args.admission_queue_len)
         # sim traces carry no token ids, so hits only arise when a caller
         # fills them in — the knob still gates the modeled accounting
         eng.backend = SimBackend(prefix_cache=not args.no_prefix_cache)
         metrics = eng.run_trace(reqs)
 
     s = metrics.summary()
+    sched = eng.last_sched
+    if sched is not None:
+        # degradation-ladder / failure counters (DESIGN.md §12)
+        s["admission_deferrals"] = sched.admission_deferrals
+        s["admission_rejections"] = sched.admission_rejections
+        s["pressure_evictions"] = sched.pressure_evictions
+        s["horizon_shrinks"] = sched.horizon_shrinks
+        s["deadline_aborts"] = sched.deadline_aborts
+        s["fault_quarantines"] = sched.fault_quarantines
     if args.json:
         print(json.dumps(s, indent=2))
     else:

@@ -1,0 +1,466 @@
+"""Chaos suite for the bounded-resource failure model (DESIGN.md §12).
+
+Deterministic faults are injected at every stage boundary — mid-prefill-
+chunk, mid-fused-segment, at the prefix-cache copy, at finish — and the
+invariant under test is always the same: the faulting flow quarantines with
+a typed terminal status, every OTHER flow completes token-exactly against
+the fault-free reference, and ``validate()`` proves zero slot/refcount
+leaks afterwards.  Plus: admission-ladder order (evict -> shrink -> defer
+-> reject), deadline aborts at the documented segment boundary, and the
+ISSUE's standard chaos scenario (pool at cap + hook fault + transient
+device fault + deadline expiry in one run).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AgentXPUEngine, Priority, Request
+from repro.core.faults import (AdmissionRejected, AllocationFault, Fault,
+                               FaultInjector, HookFault, InvariantViolation,
+                               PermanentDeviceFault, TransientDeviceFault)
+from repro.core.prefixcache import PrefixCache
+from repro.core.requests import ReqState
+
+
+def _mk_requests(cfg, rng, arrivals, prompt_lens, out_tokens, reactive=()):
+    reqs = []
+    for i, (t, plen) in enumerate(zip(arrivals, prompt_lens)):
+        reqs.append(Request(
+            id=i,
+            priority=Priority.REACTIVE if i in reactive
+            else Priority.PROACTIVE,
+            prompt_len=plen, max_new_tokens=out_tokens, arrival_time=t,
+            tokens=rng.integers(0, cfg.vocab_size, (1, plen))))
+    return reqs
+
+
+def _reference_tokens(cfg, params, prompt, n_out, max_len):
+    import jax.numpy as jnp
+    from repro.models import extend, prefill
+    lg, cache = prefill(cfg, params, jnp.asarray(prompt), max_len=max_len,
+                        dtype=jnp.float32)
+    out = [int(lg.argmax(-1)[0])]
+    for _ in range(n_out - 1):
+        lg, cache = extend(cfg, params, cache,
+                           jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(lg.argmax(-1)[0]))
+    return out
+
+
+def _tiny_real_engine(**kw):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_tiny_config
+    from repro.core.engine import RealAgentXPUEngine
+    from repro.models import init_params
+    cfg = get_tiny_config("llama3-405b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    kw.setdefault("strict_invariants", True)  # audit every turn, every test
+    return cfg, params, RealAgentXPUEngine(cfg, params, max_len=128, **kw)
+
+
+def _assert_no_leaks(backend):
+    problems = backend.validate()
+    assert problems == [], problems
+    assert not backend._slot
+    assert len(backend._free) == backend.pool_slots
+
+
+# -- injector mechanics (no JAX) ---------------------------------------------
+def test_fault_trigger_arithmetic():
+    """nth/count/period fire by matching-check count, deterministically."""
+    f = Fault(site="device", nth=3, count=2)
+    inj = FaultInjector([f])
+    fired = []
+    for i in range(1, 8):
+        fired.append(inj.fires("device"))
+    assert fired == [False, False, True, True, False, False, False]
+    # periodic refire (sustained-fault benchmark load)
+    g = Fault(site="device", nth=2, count=1, period=3)
+    inj2 = FaultInjector([g])
+    assert [inj2.fires("device") for _ in range(8)] == \
+        [False, True, False, False, True, False, False, True]
+    # site/stage/req_id narrowing: non-matching checks don't advance `seen`
+    h = Fault(site="device", stage="prefill", req_id=7, nth=1)
+    inj3 = FaultInjector([h])
+    assert not inj3.fires("device", req_id=7, stage="decode")
+    assert not inj3.fires("device", req_id=8, stage="prefill")
+    assert not inj3.fires("hook", req_id=7)
+    assert inj3.fires("device", req_id=7, stage="prefill")
+    assert inj3.stats() == {"fault_checks": 4, "faults_fired": 1}
+
+
+def test_fault_error_types():
+    inj = FaultInjector([Fault(site="alloc"), Fault(site="hook"),
+                         Fault(site="device", transient=False)])
+    with pytest.raises(AllocationFault):
+        inj.check("alloc")
+    with pytest.raises(HookFault):
+        inj.check("hook")
+    with pytest.raises(PermanentDeviceFault):
+        inj.check("device")
+    with pytest.raises(TransientDeviceFault):
+        FaultInjector([Fault(site="device")]).check("device")
+    with pytest.raises(ValueError):
+        Fault(site="gpu")
+
+
+def test_prefix_cache_evict_unpinned_spares_pins():
+    """Rung-1 pressure eviction drops every unpinned node (cascading to
+    exposed parents) but never a pinned node or its ancestors."""
+    pc = PrefixCache(capacity_tokens=1 << 16)
+    pc.insert([1, 2, 3, 4])
+    path, _ = pc.insert([1, 2, 3, 9, 9])  # splits: [1,2,3] -> {4 | 9,9}
+    pc.insert([5, 5, 5])
+    pinned = path[-1]  # the [9, 9] leaf
+    pc.pin(pinned)
+    evicted = pc.evict_unpinned()
+    # the [4] leaf, then nothing else evictable under the pinned branch;
+    # the [5,5,5] leaf goes too
+    assert pinned.parent is not None  # still attached
+    assert all(n is not pinned for n in evicted)
+    keys = sorted(tuple(n.key) for n in evicted)
+    assert keys == [(4,), (5, 5, 5)]
+    assert pc.size_tokens == 5  # [1,2,3] + [9,9] survive
+    pc.unpin(pinned)
+    pc.evict_unpinned()
+    assert pc.size_tokens == 0 and len(pc) == 0
+
+
+# -- admission ladder (sim mode, no JAX) -------------------------------------
+def _sim_engine(**kw):
+    return AgentXPUEngine(get_config("llama3.2-3b"), **kw)
+
+
+def test_ladder_walked_in_order_evict_shrink_defer_reject():
+    """At saturation the degradation ladder fires top-down: prefix-cache
+    eviction, then horizon shrink, then bounded deferral, and only then a
+    typed rejection."""
+    eng = _sim_engine(pool_slots_max=2, admission_queue_len=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(id=i, priority=Priority.PROACTIVE,
+                    prompt_len=int(rng.integers(150, 250)),
+                    max_new_tokens=40, arrival_time=0.001 * i)
+            for i in range(8)]
+    m = eng.run_trace(reqs)
+    sched = eng.last_sched
+    ev = sched.ladder_events
+    assert sched.admission_rejections > 0  # the ladder was exhausted
+    first = {k: ev.index(k) for k in ("evict", "shrink", "defer", "reject")}
+    assert first["evict"] < first["shrink"] < first["defer"] \
+        < first["reject"]
+    # rung 2 really shrank the horizon, and never below one abort segment
+    assert sched.horizon_shrinks > 0
+    assert sched.max_fused_steps >= sched.decode_segment_steps
+    # every request retires exactly once, with a typed status
+    assert len(m.completed) == len(reqs)
+    assert all(r.terminal_status is not None for r in m.completed)
+
+
+def test_rejection_is_typed_terminal_not_exception():
+    eng = _sim_engine(pool_slots_max=1, admission_queue_len=0)
+    reqs = [Request(id=i, priority=Priority.PROACTIVE, prompt_len=200,
+                    max_new_tokens=30, arrival_time=0.0) for i in range(3)]
+    m = eng.run_trace(reqs)  # must not raise
+    rej = [r for r in m.completed if r.state == ReqState.REJECTED]
+    assert len(rej) == 2 and len(m.completed) == 3
+    for r in rej:
+        assert r.terminal_status == "rejected"
+        assert "pool saturated" in r.fault
+        assert r.finish_t is not None and r.decoded == 0
+    assert str(AdmissionRejected("x"))  # the type the fault string carries
+    s = m.summary()
+    assert s["n_rejected"] == 2 and s["n_completed"] == 1
+
+
+def test_deferred_request_admitted_when_capacity_frees():
+    """Rung 3: a deferred arrival is served after a slot frees — same
+    tokens-through as an uncapped run, just later."""
+    eng = _sim_engine(pool_slots_max=2, admission_queue_len=8)
+    reqs = [Request(id=i, priority=Priority.PROACTIVE, prompt_len=120,
+                    max_new_tokens=12, arrival_time=0.0) for i in range(4)]
+    m = eng.run_trace(copy.deepcopy(reqs))
+    sched = eng.last_sched
+    assert sched.admission_deferrals >= 2 and not sched.admission_rejections
+    assert all(r.state == ReqState.DONE for r in m.completed)
+    assert len(m.completed) == 4
+    # the fused horizon is restored once pressure clears
+    assert sched.max_fused_steps == sched._base_max_fused
+
+
+def test_sim_deadline_expires_as_timed_out():
+    eng = _sim_engine(pool_slots_max=None)
+    reqs = [Request(id=0, priority=Priority.PROACTIVE, prompt_len=400,
+                    max_new_tokens=64, arrival_time=0.0, deadline=0.05),
+            Request(id=1, priority=Priority.PROACTIVE, prompt_len=100,
+                    max_new_tokens=8, arrival_time=0.0)]
+    m = eng.run_trace(reqs)
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[0].state == ReqState.TIMED_OUT
+    assert "deadline" in by_id[0].fault
+    assert by_id[1].state == ReqState.DONE
+    assert eng.last_sched.deadline_aborts == 1
+
+
+# -- per-flow fault isolation (real mode) ------------------------------------
+def test_hook_exception_quarantines_one_flow():
+    """One flow's on_token callback raising quarantines THAT flow as
+    ``failed`` — its partial output stays retrievable — while every other
+    flow completes token-exactly.  Zero leaks."""
+    cfg, params, eng = _tiny_real_engine(decode_segment_steps=2)
+    rng = np.random.default_rng(71)
+    reqs = _mk_requests(cfg, rng, [0.0] * 3, [12, 14, 16], 10)
+    victim = reqs[1]
+
+    def boom(req, tok):
+        if req.id == victim.id and req.decoded >= 3:
+            raise RuntimeError("user callback exploded")
+
+    for r in reqs:
+        eng.submit(r, on_token=boom)
+    m = eng.run()  # must NOT raise
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[victim.id].state == ReqState.FAILED
+    assert "hook" in by_id[victim.id].fault
+    assert "exploded" in by_id[victim.id].fault
+    # partial output of the quarantined flow is retrievable
+    partial = eng.output_tokens(victim.id)
+    ref_v = _reference_tokens(cfg, params, victim.tokens, 10, 128)
+    assert 1 <= len(partial) < 10 and partial == ref_v[:len(partial)]
+    for r in (reqs[0], reqs[2]):
+        assert by_id[r.id].state == ReqState.DONE
+        ref = _reference_tokens(cfg, params, r.tokens, 10, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    assert eng.stats()["quarantined_flows"] == 1
+    _assert_no_leaks(eng.backend)
+
+
+def test_transient_device_fault_replays_segment():
+    """A transient device failure on the Nth dispatch is retried by
+    replaying the abortable segment: the run completes token-exactly, no
+    flow is quarantined."""
+    inj = FaultInjector([Fault(site="device", stage="decode", nth=2),
+                         Fault(site="device", stage="prefill", nth=1)])
+    cfg, params, eng = _tiny_real_engine(decode_segment_steps=2, faults=inj)
+    rng = np.random.default_rng(73)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 8)
+    m = eng.serve(copy.deepcopy(reqs))
+    st = eng.stats()
+    assert st["device_fault_retries"] == 2
+    assert st["quarantined_flows"] == 0
+    assert all(r.state == ReqState.DONE for r in m.completed)
+    for r in reqs:
+        ref = _reference_tokens(cfg, params, r.tokens, 8, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    _assert_no_leaks(eng.backend)
+
+
+@pytest.mark.parametrize("stage,nth", [("prefill", 1), ("prefix_copy", 1)])
+def test_permanent_device_fault_quarantines_only_victim(stage, nth):
+    """A non-transient device fault pinned to one flow (mid-prefill-chunk,
+    or at the prefix-cache copy) retires that flow as ``failed``; the
+    survivors are token-exact vs the fault-free reference."""
+    rng = np.random.default_rng(79)
+    from repro.configs import get_tiny_config
+    cfg = get_tiny_config("llama3-405b")
+    # shared prefix so the victim takes the prefix-copy path when asked
+    shared = rng.integers(0, cfg.vocab_size, (1, 16))
+
+    def mk(i, tail):
+        toks = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, (1, tail))], axis=1)
+        return Request(id=i, priority=Priority.PROACTIVE,
+                       prompt_len=toks.shape[1], max_new_tokens=6,
+                       arrival_time=0.002 * i, tokens=toks)
+
+    reqs = [mk(0, 12), mk(1, 10), mk(2, 14)]
+    victim = reqs[1]
+    inj = FaultInjector([Fault(site="device", stage=stage, nth=nth,
+                               req_id=victim.id, transient=False)])
+    cfg, params, eng = _tiny_real_engine(faults=inj)
+    m = eng.serve(copy.deepcopy(reqs))
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[victim.id].state == ReqState.FAILED
+    assert "prefill" in by_id[victim.id].fault
+    for r in (reqs[0], reqs[2]):
+        assert by_id[r.id].state == ReqState.DONE
+        ref = _reference_tokens(cfg, params, r.tokens, 6, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id} ({stage})"
+    _assert_no_leaks(eng.backend)
+
+
+def test_fault_mid_fused_segment_keeps_survivor_rows():
+    """A flow quarantined mid-fused-run (hook fault while a committed plan
+    streams) is excised from the plan at the segment boundary; the
+    survivors' buffered iterations still commit token-exactly."""
+    cfg, params, eng = _tiny_real_engine(decode_segment_steps=2,
+                                         max_fused_steps=32)
+    rng = np.random.default_rng(83)
+    reqs = _mk_requests(cfg, rng, [0.0] * 3, [12, 14, 16], 16)
+    victim = reqs[0]
+
+    def boom(req, tok):
+        if req.id == victim.id and req.decoded >= 5:
+            raise RuntimeError("mid-fused hook fault")
+
+    for r in reqs:
+        eng.submit(r, on_token=boom)
+    m = eng.run()
+    st = eng.stats()
+    assert st["fused_runs"] > 0  # the fault really landed under a plan
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[victim.id].state == ReqState.FAILED
+    for r in (reqs[1], reqs[2]):
+        ref = _reference_tokens(cfg, params, r.tokens, 16, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    _assert_no_leaks(eng.backend)
+
+
+def test_fault_at_finish_forces_cleanup_through():
+    """An injected device fault at the finish-stage clear call must not
+    leak the slot: cleanup is forced through and the flow still completes."""
+    inj = FaultInjector([Fault(site="device", stage="finish", nth=1,
+                               transient=False)])
+    cfg, params, eng = _tiny_real_engine(faults=inj)
+    rng = np.random.default_rng(89)
+    reqs = _mk_requests(cfg, rng, [0.0], [12], 4)
+    m = eng.serve(copy.deepcopy(reqs))
+    assert m.completed[0].state == ReqState.DONE
+    ref = _reference_tokens(cfg, params, reqs[0].tokens, 4, 128)
+    assert eng.output_tokens(reqs[0].id) == ref
+    assert eng.stats()["flow_faults"] == 1  # counted, not raised
+    _assert_no_leaks(eng.backend)
+
+
+def test_alloc_fault_is_flow_attributable():
+    """Slot-pool exhaustion at ``pool_slots_max`` (backend backstop under
+    an injected alloc fault) quarantines the requesting flow only."""
+    inj = FaultInjector([Fault(site="alloc", req_id=1)])
+    cfg, params, eng = _tiny_real_engine(faults=inj)
+    rng = np.random.default_rng(97)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 5)
+    m = eng.serve(copy.deepcopy(reqs))
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[1].state == ReqState.FAILED
+    assert by_id[0].state == ReqState.DONE
+    ref = _reference_tokens(cfg, params, reqs[0].tokens, 5, 128)
+    assert eng.output_tokens(0) == ref
+    _assert_no_leaks(eng.backend)
+
+
+def test_grow_pool_capped_raises_allocation_fault():
+    cfg, params, eng = _tiny_real_engine(pool_slots=1, pool_slots_max=1)
+    be = eng.backend
+    assert be.pool_slots == 1
+    with pytest.raises(AllocationFault, match="pool_slots_max"):
+        be._grow_pool()
+    # uncapped growth still doubles
+    cfg2, params2, eng2 = _tiny_real_engine(pool_slots=1)
+    eng2.backend._grow_pool()
+    assert eng2.backend.pool_slots == 2
+
+
+def test_deadline_abort_at_segment_boundary():
+    """An expired deadline aborts the flow at the next segment boundary:
+    the committed token block is an exact prefix of the reference, and the
+    flow retires as ``timed_out`` with its slot reclaimed.  The deadline is
+    picked between the victim's fault-free TTFT and completion time (sim
+    time is deterministic), so the abort lands mid-decode."""
+    victim_id = 1
+    rng = np.random.default_rng(101)
+    cfg, params, eng0 = _tiny_real_engine(decode_segment_steps=2)
+    reqs = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 12)
+    m0 = eng0.serve(copy.deepcopy(reqs))
+    v0 = {r.id: r for r in m0.completed}[victim_id]
+    assert v0.state == ReqState.DONE
+    # expire two-thirds of the way through the victim's decode
+    reqs[victim_id].deadline = v0.ttft + (v0.e2e_latency - v0.ttft) * 2 / 3
+    cfg, params, eng = _tiny_real_engine(decode_segment_steps=2)
+    m = eng.serve(copy.deepcopy(reqs))
+    by_id = {r.id: r for r in m.completed}
+    assert by_id[victim_id].state == ReqState.TIMED_OUT
+    assert "deadline" in by_id[victim_id].fault
+    ref_v = _reference_tokens(cfg, params, reqs[victim_id].tokens, 12, 128)
+    partial = eng.output_tokens(victim_id)
+    assert 1 <= len(partial) < 12 and partial == ref_v[:len(partial)]
+    assert by_id[0].state == ReqState.DONE
+    ref = _reference_tokens(cfg, params, reqs[0].tokens, 12, 128)
+    assert eng.output_tokens(0) == ref
+    assert eng.last_sched.deadline_aborts == 1
+    _assert_no_leaks(eng.backend)
+
+
+def test_legacy_raise_out_mode():
+    """isolate_flow_faults=False restores the old semantics: a hook
+    exception tears the whole run down (still without leaking slots —
+    covered further in test_preemption_real.py)."""
+    cfg, params, eng = _tiny_real_engine(isolate_flow_faults=False,
+                                         strict_invariants=False)
+    rng = np.random.default_rng(103)
+    reqs = _mk_requests(cfg, rng, [0.0], [12], 6)
+
+    def boom(req, tok):
+        raise RuntimeError("legacy raise-out")
+
+    eng.submit(reqs[0], on_token=boom)
+    with pytest.raises(RuntimeError, match="legacy raise-out"):
+        eng.run()
+    _assert_no_leaks(eng.backend)
+
+
+def test_validate_catches_corruption():
+    """The invariant auditor actually detects broken accounting (it is not
+    a tautology), and the strict flag raises ``InvariantViolation``."""
+    cfg, params, eng = _tiny_real_engine()
+    be = eng.backend
+    assert be.validate() == []
+    be._free.append(0)  # duplicate free slot: free/bound no longer partition
+    problems = be.validate()
+    assert problems, "corruption went undetected"
+    with pytest.raises(InvariantViolation):
+        be.validate(strict=True)
+    be._free.remove(0)
+    assert be.validate() == []
+
+
+def test_standard_chaos_scenario():
+    """The ISSUE's acceptance scenario in one run: pool at cap, one hook
+    fault, one transient device fault, one deadline expiry.  Every
+    unaffected flow finishes token-exactly, all terminal statuses are
+    typed, and strict validation finds zero leaks."""
+    hook_victim, deadline_victim = 2, 4
+    inj = FaultInjector([
+        Fault(site="device", stage="decode", nth=3),  # transient: retried
+        Fault(site="deadline", req_id=deadline_victim, nth=8, period=1),
+    ])
+    cfg, params, eng = _tiny_real_engine(
+        decode_segment_steps=2, pool_slots=2, pool_slots_max=4,
+        admission_queue_len=4, faults=inj)
+    rng = np.random.default_rng(107)
+    reqs = _mk_requests(cfg, rng, [0.002 * i for i in range(6)],
+                        [12, 14, 16, 12, 14, 16], 10, reactive=(5,))
+
+    def boom(req, tok):
+        if req.id == hook_victim and req.decoded >= 2:
+            raise RuntimeError("chaos hook fault")
+
+    for r in reqs:
+        eng.submit(r, on_token=boom)
+    m = eng.run()  # strict invariants audit every turn inside
+    st = eng.stats()
+    by_id = {r.id: r for r in m.completed}
+    assert len(m.completed) == 6
+    assert by_id[hook_victim].state == ReqState.FAILED
+    assert by_id[deadline_victim].state == ReqState.TIMED_OUT
+    assert st["device_fault_retries"] >= 1
+    survivors = [r for r in reqs
+                 if r.id not in (hook_victim, deadline_victim)]
+    for r in survivors:
+        assert by_id[r.id].state == ReqState.DONE
+        ref = _reference_tokens(cfg, params, r.tokens, 10, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    # zero leaks: every slot back in the free heap, accounting consistent
+    _assert_no_leaks(eng.backend)
+    assert st["pool_slots"] <= 4  # the cap held — no silent growth

@@ -229,10 +229,14 @@ def test_arrival_source_polled_each_turn():
 
 
 def test_failed_run_releases_slots():
-    """A user hook raising out of the live event loop (streaming-arrival
-    seam) must not leak bound pool slots: the failed run releases its
-    requests and the engine stays serviceable."""
-    cfg, params, eng = _tiny_real_engine(pool_slots=2)
+    """Legacy fault path (``isolate_flow_faults=False``): a user hook
+    raising out of the live event loop tears the run down, but must not
+    leak bound pool slots — the failed run releases its requests and the
+    engine stays serviceable.  (With the default per-flow isolation the
+    same hook exception quarantines only its own flow: tests/
+    test_faults.py.)"""
+    cfg, params, eng = _tiny_real_engine(pool_slots=2,
+                                         isolate_flow_faults=False)
     rng = np.random.default_rng(67)
     reqs = _mk_requests(cfg, rng, [0.0, 0.0], [12, 14], 8)
     state = {"n": 0}
