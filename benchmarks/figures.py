@@ -115,6 +115,14 @@ def bench_coscheduling() -> Tuple[List[dict], float]:
                  "agent.xpu"):
         m = AgentXPUEngine(CFG, scheduler=name).run_trace(
             copy.deepcopy(reqs), max_time=10_000.0)
+        if m.summary()["n_completed"] < len(reqs):
+            # a scheme that completed nothing must fail the job loudly —
+            # an empty-completed IndexError below would be cryptic, and a
+            # defaulted 0.0 row would poison the Fig 4 comparison silently
+            raise RuntimeError(
+                f"bench_coscheduling ({name}): only "
+                f"{m.summary()['n_completed']} of {len(reqs)} flows "
+                f"completed within max_time")
         r = [x for x in m.completed if x.priority == Priority.REACTIVE][0]
         p = [x for x in m.completed if x.priority == Priority.PROACTIVE][0]
         rows.append({"scheme": name, "reactive_ttft": r.ttft,
@@ -181,6 +189,10 @@ def bench_mixed() -> Tuple[List[dict], float]:
                 m = AgentXPUEngine(CFG, scheduler=name).run_trace(
                     copy.deepcopy(reqs), max_time=4_000.0)
                 s = m.summary()
+                if s["n_completed"] == 0:
+                    raise RuntimeError(
+                        f"bench_mixed ({name}, rate={rate}): 0 flows "
+                        f"completed — scheduler stalled on the trace")
                 rec[f"Rnorm_{name}"] = s["reactive_norm_latency"]
                 rec[f"Pe2e_{name}"] = s["proactive_e2e"]
                 rec[f"tok_s_{name}"] = s["tokens_per_s"]
@@ -213,6 +225,9 @@ def bench_ablation() -> Tuple[List[dict], float]:
         m = AgentXPUEngine(CFG, scheduler="agent.xpu", **kw).run_trace(
             copy.deepcopy(base_reqs), max_time=4000.0)
         s = m.summary()
+        if s["n_completed"] == 0:
+            raise RuntimeError(f"bench_ablation ({name}): 0 flows "
+                               f"completed — variant stalled on the trace")
         rows.append({"variant": name,
                      "reactive_norm_latency": s["reactive_norm_latency"],
                      "proactive_e2e": s["proactive_e2e"],

@@ -16,7 +16,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import figures  # noqa: E402
+from benchmarks import figures, loadgen  # noqa: E402
 from benchmarks.roofline import table as roofline_table  # noqa: E402
 
 BENCHES = [
@@ -32,6 +32,7 @@ BENCHES = [
     ("prefill_throughput", figures.bench_prefill_throughput),
     ("prefix_reuse", figures.bench_prefix_reuse),
     ("reactive_latency", figures.bench_reactive_latency),
+    ("serving_slo", loadgen.bench_serving),
 ]
 
 
@@ -56,7 +57,8 @@ def main(argv=None) -> None:
         if args.only is None and args.quick and name in (
                 "fig6_proactive_only", "fig7_mixed", "ablation_mechanisms",
                 "real_decode_batching", "decode_throughput",
-                "prefill_throughput", "prefix_reuse", "reactive_latency"):
+                "prefill_throughput", "prefix_reuse", "reactive_latency",
+                "serving_slo"):
             continue
         t0 = time.time()
         rows, derived = fn()

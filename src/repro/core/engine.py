@@ -22,7 +22,7 @@ from repro.core.annotation import (HardwareProfile, INTEL_CORE_ULTRA_5_125H)
 from repro.core.backend import ExecutionBackend, TokenCallback
 from repro.core.baselines import BASELINES
 from repro.core.heg import HEG
-from repro.core.requests import Priority, Request
+from repro.core.requests import Priority, Request, ReqState
 from repro.core.scheduler import AgentXpuScheduler, SchedulerBase
 from repro.core.simulator import Simulator, SimMetrics
 
@@ -60,11 +60,13 @@ class AgentXPUEngine:
         self.last_trace: List[tuple] = []  # kernel-completion trace
         self.last_sched: Optional[SchedulerBase] = None
         self._sim: Optional[Simulator] = None  # live event loop, if any
+        self._sched: Optional[SchedulerBase] = None  # scheduler of that loop
         self._arrival_poll = None
 
     def _run(self, requests: List[Request], max_time: float) -> SimMetrics:
         sched = make_scheduler(self.scheduler_name, self.heg,
                                backend=self.backend, **self.sched_kw)
+        self._sched = sched  # cancel() targets the LIVE scheduler
         # per-turn poll composition (DESIGN.md §12), in order: (1) the
         # scheduler quarantines parked backend faults / expired deadlines
         # and drains the admission queue, (2) the strict-invariant audit
@@ -191,6 +193,29 @@ class RealAgentXPUEngine(AgentXPUEngine):
         else:
             self._pending.append(req)
         return req
+
+    def cancel(self, req) -> bool:
+        """Client cancellation of a submitted flow (DESIGN.md §13).  Takes
+        a ``Request`` or its id.  A flow still pending between runs retires
+        immediately (state ``cancelled``, register-time backend state
+        freed); a flow inside the live event loop is parked with the
+        scheduler and quarantined at the next per-turn poll — one abort
+        segment of latency, slot and prefix pins released, survivors
+        untouched.  Returns False when the engine holds no trace of the
+        flow (already retired, or never submitted).  Thread-safe under the
+        GIL: the serving front-end calls this from consumer threads."""
+        rid = req.id if isinstance(req, Request) else int(req)
+        for i, r in enumerate(self._pending):
+            if r.id == rid:
+                del self._pending[i]
+                r.state = ReqState.CANCELLED
+                r.fault = "client cancelled before run"
+                self.backend.finish(r, 0.0)
+                return True
+        if self._sim is not None and self._sched is not None \
+                and any(r.id == rid for r in self._live):
+            return self._sched.request_cancel(rid)
+        return False
 
     def set_arrival_source(self, source) -> None:
         """Install a streaming arrival source: ``source(sim_now)`` is polled

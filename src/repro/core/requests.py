@@ -31,15 +31,16 @@ class ReqState(enum.Enum):
     DECODE = "decode"
     DONE = "done"
     # terminal failure lattice (DESIGN.md §12): every request retires in
-    # exactly one of DONE / FAILED / TIMED_OUT / REJECTED — never by an
-    # unhandled exception tearing down the run
+    # exactly one of DONE / FAILED / TIMED_OUT / REJECTED / CANCELLED —
+    # never by an unhandled exception tearing down the run
     FAILED = "failed"  # quarantined: hook raised / backend fault
     TIMED_OUT = "timed_out"  # deadline expired at a segment boundary
     REJECTED = "rejected"  # admission ladder exhausted (AdmissionRejected)
+    CANCELLED = "cancelled"  # client abandoned the flow (DESIGN.md §13)
 
 
 TERMINAL_STATES = (ReqState.DONE, ReqState.FAILED, ReqState.TIMED_OUT,
-                   ReqState.REJECTED)
+                   ReqState.REJECTED, ReqState.CANCELLED)
 
 
 @dataclasses.dataclass

@@ -103,6 +103,12 @@ class SchedulerBase:
         self.horizon_shrinks = 0
         self.deadline_aborts = 0
         self.fault_quarantines = 0
+        self.cancelled_flows = 0  # client-abandoned flows (DESIGN.md §13)
+        # client cancellations parked for the per-turn poll: like backend
+        # faults, a cancel takes effect at the next event-loop turn — an
+        # abort-segment boundary under abortable runs — so the serving
+        # front-end may file one from any thread at any time
+        self._cancel_pending: set = set()
         # rung firings in order ("evict"/"shrink"/"defer"/"reject") — the
         # chaos suite asserts the ladder is walked top-down
         self.ladder_events: List[str] = []
@@ -118,6 +124,14 @@ class SchedulerBase:
         return ReqContext.build(req, self.heg, start_tok=req.prefix_hit)
 
     def on_arrival(self, req: Request, now: float):
+        if req.id in self._cancel_pending:
+            # cancel filed between submit and the arrival event (the front-
+            # end's client vanished before the flow ever entered the queues)
+            self._cancel_pending.discard(req.id)
+            self.cancelled_flows += 1
+            self._retire(req, now, ReqState.CANCELLED,
+                         "client cancelled before arrival")
+            return
         if not self._admit(req, now):
             return
         self._enqueue(req, now)
@@ -224,6 +238,16 @@ class SchedulerBase:
         cap = self.pool_slots_max
         if cap is None:
             return
+        if self._admission_wait and self._occupancy() >= cap \
+                and self.backend.kv_store_rows() > 0:
+            # liveness rung: deferred flows must never strand behind pure
+            # cache ballast.  Without this, a drained pool whose occupancy
+            # is all prefix-snapshot rows re-admits nobody and the run ends
+            # with the wait queue populated (exposed by the open-loop
+            # serving bench at >100 flows).
+            if self.backend.evict_prefix_leaves() > 0:
+                self.pressure_evictions += 1
+                self.ladder_events.append("evict")
         while self._admission_wait and self._occupancy() < cap:
             req = self._admission_wait.popleft()
             if self.backend.deadline_expired(req, now):
@@ -237,12 +261,47 @@ class SchedulerBase:
             self.max_fused_steps = min(self._base_max_fused,
                                        self.max_fused_steps * 2)
 
+    # -- client cancellation (DESIGN.md §13) ---------------------------------
+    def request_cancel(self, req_id: int) -> bool:
+        """Park a client cancellation for the next per-turn poll.  Safe to
+        call at any point of the flow's life: a rid not yet known (the
+        arrival event is still in the heap) stays parked until its arrival
+        claims it, and parked leftovers die with the scheduler at run end.
+        Thread-safe under the GIL: the serving front-end files cancels from
+        consumer threads while the event loop runs."""
+        self._cancel_pending.add(req_id)
+        return True
+
+    def _drain_cancels(self, now: float):
+        cancels, self._cancel_pending = self._cancel_pending, set()
+        for rid in cancels:
+            c = self.ctx.get(rid)
+            if c is not None:
+                self._quarantine(c.req, now, ReqState.CANCELLED,
+                                 "client cancelled mid-flight")
+                continue
+            for i, r in enumerate(self._admission_wait):
+                if r.id == rid:
+                    del self._admission_wait[i]
+                    self.cancelled_flows += 1
+                    self._retire(r, now, ReqState.CANCELLED,
+                                 "client cancelled while deferred at "
+                                 "admission")
+                    break
+            else:
+                # not arrived yet (event still heap-bound): keep parked so
+                # ``on_arrival`` can claim it
+                self._cancel_pending.add(rid)
+
     # -- per-turn poll: fault quarantine + deadlines (DESIGN.md §12) ---------
     def on_turn(self, now: float):
         """Driven once per event-loop turn (Simulator ``poll``).  Order
-        matters: parked backend faults quarantine first (their flows must
-        not be charged a deadline miss for a fault), then expired deadlines
-        abort at the segment boundary, then freed capacity re-admits."""
+        matters: client cancels first (an abandoned flow must not be
+        charged a deadline miss or fault), then parked backend faults,
+        then expired deadlines abort at the segment boundary, then freed
+        capacity re-admits."""
+        if self._cancel_pending:
+            self._drain_cancels(now)
         for f in self.backend.take_flow_faults():
             c = self.ctx.get(f.req_id)
             if c is not None:
@@ -303,6 +362,8 @@ class SchedulerBase:
         self.backend.quarantine_flow(req, now)
         if state == ReqState.TIMED_OUT:
             self.deadline_aborts += 1
+        elif state == ReqState.CANCELLED:
+            self.cancelled_flows += 1
         else:
             self.fault_quarantines += 1
         self._drain_admission(now)

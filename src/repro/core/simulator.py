@@ -41,7 +41,7 @@ class SimMetrics:
         ps = [r for r in ok if r.priority == Priority.PROACTIVE]
         tokens = sum(r.decoded for r in self.completed)
         statuses = {"completed": 0, "failed": 0, "timed_out": 0,
-                    "rejected": 0}
+                    "rejected": 0, "cancelled": 0}
         for r in self.completed:
             s = r.terminal_status
             if s is not None:
@@ -52,6 +52,7 @@ class SimMetrics:
             "n_failed": statuses["failed"],
             "n_timed_out": statuses["timed_out"],
             "n_rejected": statuses["rejected"],
+            "n_cancelled": statuses["cancelled"],
             "reactive_norm_latency":
                 self._lat(Priority.REACTIVE, lambda r: r.normalized_latency),
             "reactive_ttft": self._lat(Priority.REACTIVE, lambda r: r.ttft),

@@ -1,0 +1,184 @@
+"""Open-loop load generator: schedule determinism, trace round-trip,
+end-to-end determinism of per-flow token streams, zero-completion guard.
+
+Schedule-level tests are numpy-only (no jax import); the end-to-end test
+drives a real tiny engine through the serving front-end twice and demands
+byte-identical per-flow streams — the reproducibility contract the CI
+serving benchmark rests on."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks.loadgen import (FlowSpec, LoadSpec, build_schedule,
+                                flow_prompt, load_trace,
+                                population_prefix, run_open_loop,
+                                save_trace)
+
+
+def test_schedule_deterministic():
+    spec = LoadSpec(seed=42, n_flows=50, duration_s=3.0)
+    a, b = build_schedule(spec), build_schedule(spec)
+    assert a == b
+    assert len(a) == 50
+    assert all(0.0 <= fs.offset_s <= 3.0 for fs in a)
+    offs = [fs.offset_s for fs in a]
+    assert offs == sorted(offs)
+    n_reactive = sum(fs.priority == "reactive" for fs in a)
+    assert n_reactive == round(50 * spec.reactive_fraction)
+    # a different seed produces a different schedule
+    assert build_schedule(LoadSpec(seed=43, n_flows=50,
+                                   duration_s=3.0)) != a
+
+
+def test_prompts_deterministic_and_prefix_shared():
+    spec = LoadSpec(seed=1, n_flows=24)
+    sched = build_schedule(spec)
+    vocab = 256
+    for fs in sched[:8]:
+        p1, p2 = flow_prompt(spec, fs, vocab), flow_prompt(spec, fs, vocab)
+        np.testing.assert_array_equal(p1, p2)
+        assert p1.shape == (1, spec.prefix_len + spec.tail_len)
+        # the population prefix is literally shared (radix-cache seam)
+        np.testing.assert_array_equal(
+            p1[:, :spec.prefix_len],
+            population_prefix(spec, fs.population, vocab))
+    # two flows of the same population differ only in the tail
+    by_pop = {}
+    for fs in sched:
+        by_pop.setdefault(fs.population, []).append(fs)
+    pop, flows = next((p, fl) for p, fl in by_pop.items() if len(fl) >= 2)
+    pa = flow_prompt(spec, flows[0], vocab)
+    pb = flow_prompt(spec, flows[1], vocab)
+    np.testing.assert_array_equal(pa[:, :spec.prefix_len],
+                                  pb[:, :spec.prefix_len])
+    assert not np.array_equal(pa, pb)
+
+
+def test_trace_round_trip(tmp_path):
+    spec = LoadSpec(seed=7, n_flows=30)
+    sched = build_schedule(spec)
+    path = os.path.join(tmp_path, "trace.json")
+    save_trace(spec, sched, path)
+    spec2, sched2 = load_trace(path)
+    assert spec2 == spec
+    assert sched2 == sched
+    assert all(isinstance(fs, FlowSpec) for fs in sched2)
+    # the reloaded trace regenerates identical prompts
+    for fs, fs2 in zip(sched[:4], sched2[:4]):
+        np.testing.assert_array_equal(flow_prompt(spec, fs, 128),
+                                      flow_prompt(spec2, fs2, 128))
+
+
+def test_spec_round_trips_as_plain_json(tmp_path):
+    # the trace file must stay tool-readable: plain dicts, no pickles
+    import json
+    spec = LoadSpec(seed=3, n_flows=5)
+    path = os.path.join(tmp_path, "t.json")
+    save_trace(spec, build_schedule(spec), path)
+    doc = json.load(open(path))
+    assert set(doc) == {"spec", "flows"}
+    assert doc["spec"]["seed"] == 3
+    assert len(doc["flows"]) == 5
+    assert {f["priority"] for f in doc["flows"]} <= \
+        {"reactive", "proactive"}
+
+
+def test_open_loop_streams_deterministic():
+    """Identical seeds -> identical per-flow token streams end to end,
+    run twice through a real engine + serving front-end."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.configs import get_tiny_config
+    from repro.core.engine import RealAgentXPUEngine
+    from repro.launch.frontend import ServingFrontend
+    from repro.models import init_params
+
+    spec = LoadSpec(seed=5, n_flows=6, duration_s=0.3,
+                    reactive_out=4, proactive_out=5)
+    schedule = build_schedule(spec)
+    cfg = get_tiny_config("llama3-405b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = RealAgentXPUEngine(cfg, params, max_len=128,
+                             strict_invariants=True)
+
+    def one_run():
+        streams = {}
+        with ServingFrontend(eng) as fe:
+            orig = fe.submit
+
+            def spy(*a, **kw):
+                h = orig(*a, **kw)
+                streams[h.flow_id] = h
+                return h
+            fe.submit = spy
+            metrics = run_open_loop(fe, spec, schedule, cfg.vocab_size)
+        assert metrics["n_completed"] == 6
+        return {fid: h.result(timeout=1.0)["tokens"]
+                for fid, h in streams.items()}
+
+    first, second = one_run(), one_run()
+    assert first == second
+    assert all(tokens for tokens in first.values())
+
+
+def test_open_loop_metrics_shape():
+    """The metrics dict carries every field the regression gate and the
+    CI artifact contract rely on (synthetic frontend, no jax)."""
+
+    class _FakeHandle:
+        def __init__(self, fid, walls):
+            self.flow_id = fid
+            self._walls = walls
+
+        def result(self, timeout=None):
+            return {"status": "completed", "n_tokens": len(self._walls),
+                    "token_walls": self._walls}
+
+    class _FakeFrontend:
+        def __init__(self):
+            self.handles = {}
+
+        def submit(self, tokens, *, priority, max_new_tokens, deadline,
+                   flow_id):
+            import time
+            now = time.perf_counter()
+            h = _FakeHandle(flow_id,
+                            [now + 0.001 * (i + 1)
+                             for i in range(max_new_tokens)])
+            h.req = type("R", (), {"prefix_hit": 0})()
+            self.handles[flow_id] = h
+            return h
+
+        def drain(self, timeout=None):
+            pass
+
+        def stats(self):
+            return {"admission_deferrals": 2, "runs": 1}
+
+    spec = LoadSpec(seed=0, n_flows=10, duration_s=0.05,
+                    reactive_out=3, proactive_out=3)
+    m = run_open_loop(_FakeFrontend(), spec, build_schedule(spec), 64)
+    for key in ("goodput_flows_per_s", "throughput_flows_per_s",
+                "reactive_ttft_slo_attainment",
+                "proactive_tbt_slo_attainment",
+                "reactive_ttft_p50_ms", "reactive_ttft_p90_ms",
+                "reactive_ttft_p99_ms", "proactive_tbt_p50_ms",
+                "proactive_tbt_p90_ms", "proactive_tbt_p99_ms",
+                "admission_deferrals", "deadline_aborts",
+                "cancelled_flows", "backpressure_disconnects"):
+        assert key in m, key
+    assert m["n_flows"] == 10
+    assert m["n_completed"] == 10
+    assert m["reactive_ttft_slo_attainment"] == 1.0
+    assert m["statuses"] == {"completed": 10}
+
+
+def test_dataclass_fields_stable():
+    # save_trace/load_trace round-trip depends on FlowSpec being a flat
+    # JSON-serializable dataclass; catch accidental field-type drift
+    fs = dataclasses.fields(FlowSpec)
+    assert [f.name for f in fs] == [
+        "flow_id", "offset_s", "priority", "population", "tail_seed",
+        "prompt_len", "max_new_tokens", "deadline_s"]

@@ -1,0 +1,33 @@
+"""The CI shard map must exactly partition the test files on disk: a new
+test module that is never assigned a shard would otherwise silently never
+run in CI."""
+import glob
+import os
+
+from shards import SHARDS, all_sharded_files, shard_files
+
+
+def _on_disk():
+    here = os.path.dirname(__file__)
+    return sorted(os.path.basename(p)
+                  for p in glob.glob(os.path.join(here, "test_*.py")))
+
+
+def test_shards_partition_test_files():
+    sharded = all_sharded_files()
+    assert sorted(sharded) == _on_disk(), (
+        "tests/shards.py out of sync with tests/ — assign new modules to "
+        "a shard (or remove deleted ones)")
+    # partition, not just cover: no file in two shards
+    assert len(sharded) == len(set(sharded))
+
+
+def test_shard_files_are_pytest_paths():
+    for name in SHARDS:
+        for p in shard_files(name):
+            assert p.startswith("tests" + os.sep)
+            assert os.path.exists(p)
+
+
+def test_no_empty_shard():
+    assert all(SHARDS.values())
