@@ -31,7 +31,9 @@ against the agent.xpu scheduler and a continuous-batching baseline on the
 real backend and writes BENCH_serving.json, whose reactive SLO-attainment
 and goodput-ratio metrics are gated in benchmarks/check_regression.py.
 Env knobs (CI smoke mode): BENCH_SERVING_FLOWS, BENCH_SERVING_DURATION,
-BENCH_SERVING_OUT_TOKENS, BENCH_SERVING_POOL.
+BENCH_SERVING_OUT_TOKENS, BENCH_SERVING_POOL, and
+BENCH_SERVING_PRESET=prefill_heavy to start from ``prefill_heavy_spec``
+(long shared-prefix prompts, bursty arrivals — the DESIGN.md §14 shape).
 """
 from __future__ import annotations
 
@@ -67,6 +69,22 @@ class LoadSpec:
     # hard per-flow deadline in SIM seconds (DESIGN.md §12) — generous by
     # default so timeouts stay an exceptional, counted event
     reactive_deadline_s: Optional[float] = 60.0
+    # arrival burstiness: offsets are duration * u**burst_factor for
+    # uniform u, so factor > 1 front-loads arrivals into a burst while
+    # 1.0 (default) keeps the plain Poisson window byte-identical
+    burst_factor: float = 1.0
+
+
+def prefill_heavy_spec(**overrides) -> LoadSpec:
+    """Prefill-heavy preset (DESIGN.md §14): long shared-prefix prompts,
+    short generations, bursty arrivals with a larger reactive share — the
+    traffic shape where stage-decoupled prefill/decode overlap pays, and
+    where a single-device engine shows prefill head-of-line blocking."""
+    base = dict(n_populations=2, prefix_len=48, tail_len=24,
+                reactive_fraction=0.35, reactive_out=4, proactive_out=6,
+                burst_factor=2.0)
+    base.update(overrides)
+    return LoadSpec(**base)
 
 
 @dataclasses.dataclass
@@ -85,7 +103,9 @@ class FlowSpec:
 def build_schedule(spec: LoadSpec) -> List[FlowSpec]:
     """Seeded arrival schedule: same spec -> byte-identical schedule."""
     rng = np.random.default_rng(spec.seed)
-    offsets = np.sort(rng.uniform(0.0, spec.duration_s, spec.n_flows))
+    u = np.sort(rng.uniform(0.0, 1.0, spec.n_flows))
+    # burst_factor 1.0 is exactly the classic sorted-uniform Poisson window
+    offsets = spec.duration_s * u ** spec.burst_factor
     n_reactive = int(round(spec.n_flows * spec.reactive_fraction))
     # spread reactive flows across the window (deterministic choice
     # without replacement), mirroring the paper's interleaved agent mix
@@ -266,7 +286,10 @@ def bench_serving() -> Tuple[List[dict], float]:
     from repro.launch.frontend import ServingFrontend
     from repro.models import init_params
 
-    spec = LoadSpec(
+    mk_spec = prefill_heavy_spec \
+        if os.environ.get("BENCH_SERVING_PRESET") == "prefill_heavy" \
+        else LoadSpec
+    spec = mk_spec(
         n_flows=int(os.environ.get("BENCH_SERVING_FLOWS", "120")),
         duration_s=float(os.environ.get("BENCH_SERVING_DURATION", "4.0")),
         proactive_out=int(os.environ.get("BENCH_SERVING_OUT_TOKENS", "12")))

@@ -16,7 +16,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import figures, loadgen  # noqa: E402
+from benchmarks import figures, hetero, loadgen  # noqa: E402
 from benchmarks.roofline import table as roofline_table  # noqa: E402
 
 BENCHES = [
@@ -33,6 +33,7 @@ BENCHES = [
     ("prefix_reuse", figures.bench_prefix_reuse),
     ("reactive_latency", figures.bench_reactive_latency),
     ("serving_slo", loadgen.bench_serving),
+    ("hetero_overlap", hetero.bench_hetero),
 ]
 
 
@@ -58,7 +59,7 @@ def main(argv=None) -> None:
                 "fig6_proactive_only", "fig7_mixed", "ablation_mechanisms",
                 "real_decode_batching", "decode_throughput",
                 "prefill_throughput", "prefix_reuse", "reactive_latency",
-                "serving_slo"):
+                "serving_slo", "hetero_overlap"):
             continue
         t0 = time.time()
         rows, derived = fn()

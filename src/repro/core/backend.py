@@ -38,9 +38,12 @@ Hook protocol (driven by ``SchedulerBase.on_complete`` — no monkeypatching):
 from __future__ import annotations
 
 import heapq
+import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.core.contention import (MemoryPressureEstimator,
+                                   co_execution_rates)
 from repro.core.faults import (AllocationFault, FaultError, FaultInjector,
                                FlowFault, InvariantViolation,
                                PermanentDeviceFault, TransientDeviceFault)
@@ -509,6 +512,24 @@ class JaxRealBackend(ExecutionBackend):
         self.prefix_fallbacks = 0  # hits served by forward passes (no source)
         self.kv_bytes_prefix_copied = 0  # KV bytes moved by prefix copies
         self.prefill_forward_tokens = 0  # tokens that ran a real forward
+        # memory-contention observability (paper §6.4, DESIGN.md §14): the
+        # estimator tracks which stages are in flight RIGHT NOW (decode
+        # segments register around their launch, prefills from first chunk
+        # to prefill_done), and decode segments bucket their wall time by
+        # whether a prefill overlapped — the measured overlapped-vs-solo
+        # slowdown that calibrates the scheduler's CoExecutionCalibration.
+        # bw_util constants mirror the HEG annotation regime: prefill is
+        # compute-bound GEMM-like, decode memory-bound GEMV-like.
+        self.prefill_bw_util = 0.35
+        self.decode_bw_util = 0.85
+        self._pressure_est = MemoryPressureEstimator()
+        self._prefill_live: set = set()  # rids with an in-flight prefill
+        self.contention_pressure_peak = 0.0
+        self.co_executed_segments = 0  # decode segments with a live prefill
+        self._seg_solo_time = 0.0  # decode-segment wall s, no prefill live
+        self._seg_solo_steps = 0
+        self._seg_co_time = 0.0  # decode-segment wall s, prefill(s) live
+        self._seg_co_steps = 0
 
     # -- jitted callable cache (compilation count is O(log max_len)) --------
     def _jitted(self, key: tuple, build, donate=()):
@@ -1080,10 +1101,25 @@ class JaxRealBackend(ExecutionBackend):
             return True
         return super().deadline_expired(req, now)
 
+    def _track_prefill(self, rid: int) -> None:
+        """Register an in-flight prefill with the pressure estimator (first
+        chunk only); removed at ``prefill_done`` / flow teardown."""
+        if rid not in self._prefill_live:
+            self._prefill_live.add(rid)
+            self._pressure_est.add(f"prefill:{rid}", self.prefill_bw_util)
+            self.contention_pressure_peak = max(
+                self.contention_pressure_peak, self._pressure_est.pressure)
+
+    def _untrack_prefill(self, rid: int) -> None:
+        if rid in self._prefill_live:
+            self._prefill_live.discard(rid)
+            self._pressure_est.remove(f"prefill:{rid}")
+
     def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
                       now: float) -> None:
         if req.tokens is None or req.id in self._quarantined:
             return
+        self._track_prefill(req.id)
         try:
             if self.in_pool_prefill:
                 self._ensure_row_at(req, seq_start)
@@ -1097,6 +1133,7 @@ class JaxRealBackend(ExecutionBackend):
     def prefill_done(self, req: Request, now: float) -> None:
         if req.id in self._quarantined:
             return
+        self._untrack_prefill(req.id)
         try:
             self._prefill_done(req, now)
         except FaultError as e:
@@ -1224,6 +1261,14 @@ class JaxRealBackend(ExecutionBackend):
         if n <= 0:
             return
         slots = sorted(self._fused_slots)
+        # contention observability (§6.4): register the segment with the
+        # pressure estimator and bucket its wall time (launch -> token
+        # block on host) by whether a prefill overlapped it
+        co_executed = bool(self._prefill_live)
+        self._pressure_est.add("decode", self.decode_bw_util)
+        self.contention_pressure_peak = max(
+            self.contention_pressure_peak, self._pressure_est.pressure)
+        t0 = time.perf_counter()
         blocks = []
         for b in _pow2_buckets(n):
             rows, kvl = self._elastic_extent(slots, b)
@@ -1236,6 +1281,15 @@ class JaxRealBackend(ExecutionBackend):
             blocks.append(block)
         full = self._np.asarray(self._jnp.concatenate(blocks, axis=0)
                                 if len(blocks) > 1 else blocks[0])
+        seg_wall = time.perf_counter() - t0
+        self._pressure_est.remove("decode")
+        if co_executed:
+            self.co_executed_segments += 1
+            self._seg_co_time += seg_wall
+            self._seg_co_steps += n
+        else:
+            self._seg_solo_time += seg_wall
+            self._seg_solo_steps += n
         self.host_syncs += 1
         self._fused_rows.extend(full)
         self._fused_left -= n
@@ -1336,6 +1390,7 @@ class JaxRealBackend(ExecutionBackend):
             self._mask_host[slot] = False
             self._slot_pos.pop(slot, None)
             heapq.heappush(self._free, slot)
+        self._untrack_prefill(rid)
         self._last.pop(rid, None)
         self._scratch.pop(rid, None)
         self._scratch_pos.pop(rid, None)
@@ -1574,5 +1629,372 @@ class JaxRealBackend(ExecutionBackend):
                 "prefix_fallbacks": self.prefix_fallbacks,
                 "prefix_store_entries": len(self._store),
                 "prefill_forward_tokens": self.prefill_forward_tokens,
+                **self._contention_stats(),
                 **(self._prefix.stats() if self._prefix is not None
                    else {})}
+
+    def _contention_stats(self) -> dict:
+        """Memory-contention observability (paper §6.4, DESIGN.md §14):
+        live pressure, its high-water mark, how often decode co-executed
+        with a prefill, the measured overlapped/solo decode slowdown (None
+        until both buckets have samples), and the §6.4 model's prediction
+        for the same stage pair."""
+        solo = self._seg_solo_time / self._seg_solo_steps \
+            if self._seg_solo_steps else None
+        co = self._seg_co_time / self._seg_co_steps \
+            if self._seg_co_steps else None
+        measured = (co / solo) if (solo and co) else None
+        model_rates = co_execution_rates(
+            [self.prefill_bw_util, self.decode_bw_util])
+        return {
+            "prefill_bw_util": self.prefill_bw_util,
+            "decode_bw_util": self.decode_bw_util,
+            "contention_pressure": self._pressure_est.pressure,
+            "contention_pressure_peak": self.contention_pressure_peak,
+            "co_executed_segments": self.co_executed_segments,
+            "co_execution_rate": self.co_executed_segments
+            / max(self.decode_segments, 1),
+            "co_execution_decode_slowdown_measured": measured,
+            "co_execution_decode_slowdown_model":
+                1.0 / max(model_rates[1], 1e-9),
+            "co_execution_prefill_slowdown_model":
+                1.0 / max(model_rates[0], 1e-9),
+        }
+
+
+class DualDeviceBackend(JaxRealBackend):
+    """Stage-decoupled dual-backend execution (DESIGN.md §14): prefill runs
+    on a second JAX device (the paper's NPU analogue) while decode — and
+    the KV pool it owns — stays on device 0 (the iGPU analogue).
+
+    A staged prefill forwards its prompt chunks through a B=1 staging
+    cache resident on the prefill device, with the running next-token
+    scalar kept ON DEVICE between chunks — no host sync anywhere in the
+    prompt phase, so the prefill device's queue fills asynchronously while
+    decode segments of live flows keep launching on (and syncing only
+    with) the decode device.  At ``prefill_done`` — a scheduler turn, i.e.
+    an abortable-segment boundary — the staged row is handed off: the ring
+    prefix is truncated to the prompt's pow-2 bucket on the prefill device
+    (bounding transfer bytes), ``device_put`` across, and installed into a
+    freshly allocated pool row by ``kvcache.handoff_row`` (reset +
+    ring-indexed scatter, the same primitives in-pool prefill and
+    ``paste_prefix`` use).  ONE host sync per prefill (the first token)
+    waits only on the prefill device's dependency chain.
+
+    Elastic operator binding (HEG): a prefill falls back to co-located
+    execution on the decode device — the inherited in-pool path, byte-
+    identical tokens — when the second device is absent (``dual_device``
+    False: every flow co-locates), the staging queue is at
+    ``prefill_inflight_max`` (backpressure), the prompt has a prefix-cache
+    hit (the matched KV lives in the decode pool; copying it to the
+    staging device and back would cost more than the tail forward), or the
+    HEG affinity tables price the prefill-lane ETC above the decode lane.
+    The decision is sticky per request so a prefill never migrates devices
+    mid-prompt.
+
+    Everything here is backend-local: the scheduler drives the identical
+    hook sequence either way, so sim==real trace equality extends to the
+    dual-device path by construction.
+    """
+
+    name = "jax-dual"
+
+    def __init__(self, cfg, params, *, prefill_device=None,
+                 prefill_inflight_max: int = 8, heg=None, **kw):
+        super().__init__(cfg, params, **kw)
+        jax = self._jax
+        self.heg = heg
+        self.prefill_inflight_max = max(int(prefill_inflight_max), 1)
+        self.decode_device = next(iter(self._pool["pos"].devices()))
+        pf = prefill_device
+        if pf is None:
+            from repro.launch.mesh import (MeshDeviceError,
+                                           dual_stage_devices)
+            try:
+                _, pf = dual_stage_devices()
+            except MeshDeviceError:
+                pf = self.decode_device  # co-located fallback
+        self.prefill_device = pf
+        # staging leans on donation and the in-pool decode tail; the legacy
+        # baselines fall back to co-located execution wholesale
+        self.dual_device = (pf != self.decode_device
+                            and self.in_pool_prefill
+                            and self.device_resident)
+        self._params_pf = jax.device_put(params, pf) \
+            if self.dual_device else None
+        self._staged: set = set()  # rids prefilling on the prefill device
+        self._stage_decision: Dict[int, bool] = {}  # sticky per request
+        self._tok_dev_pf: Dict[int, object] = {}  # prompt uploads, pf device
+        # recycled staging caches (bounded by prefill_inflight_max): a
+        # fresh init_cache per prefill is the dominant fixed cost of
+        # staging, and ``reset_row(cache, 0)`` restores a used one to the
+        # fresh-bind state by the exact argument pool-row reuse rests on
+        # (slot_pos=-1 masks stale payload, pos/recurrent zeroed)
+        self._staging_free: List = []
+        self.staged_prefills = 0
+        self.prefill_inflight_peak = 0
+        self.handoff_device_calls = 0  # pool installs of staged rows
+        self.kv_bytes_handoff = 0  # ring bytes moved across the handoff
+        self.colocated_hits = 0  # fallbacks: prefix hit on the decode pool
+        self.colocated_backpressure = 0  # fallbacks: staging queue full
+        self.colocated_affinity = 0  # fallbacks: HEG priced the lane out
+
+    # -- staged prefill programs (prefill device) -----------------------------
+    def _staged_extend_fn(self, c: int, tok_len: int):
+        """One pow-2 prefill bucket against the B=1 staging cache, slicing
+        tokens on device from the resident (1, tok_len) buffer and keeping
+        the next-token scalar on device.  Placement follows the committed
+        args (staging cache + ``_params_pf`` live on the prefill device),
+        so the same jit entry serves either device with its own
+        executable."""
+        from repro.models import extend
+        cfg = self.cfg
+        jax, jnp = self._jax, self._jnp
+        kb = self.kernel_backend
+
+        def build():
+            def fn(params, cache, tok_buf, start):
+                chunk = jax.lax.dynamic_slice(
+                    tok_buf, (jnp.int32(0), start), (1, c))
+                logits, cache = extend(cfg, params, cache, chunk,
+                                       kernel_backend=kb)
+                return logits.argmax(-1).astype(jnp.int32)[0], cache
+            return fn
+        return self._jitted(("staged_extend", c, tok_len), build,
+                            donate=(1,))
+
+    def _staged_trunc_fn(self, cap: int):
+        """Prefix view of the finished staging cache — runs on the prefill
+        device, bounding the cross-device transfer to O(cap) ring bytes per
+        leaf instead of O(max_len).  Not donated: slicing cannot reuse the
+        input buffers, so donation would only warn."""
+        from repro.models import truncate_rings
+        max_len = self.max_len
+
+        def build():
+            def fn(cache):
+                return truncate_rings(cache, cap, max_len)
+            return fn
+        return self._jitted(("staged_trunc", cap), build)
+
+    def _staged_reset_fn(self):
+        """Recycle a used staging cache to the fresh-bind state (donated:
+        the reset rewrites it in place on the prefill device)."""
+        from repro.models import reset_row
+
+        def build():
+            def fn(cache):
+                return reset_row(cache, 0)
+            return fn
+        return self._jitted(("staged_reset",), build, donate=(0,))
+
+    def _handoff_fn(self, pool_size: int, cap: int):
+        """Install a transferred staging entry into pool row ``slot`` and
+        commit its first output token to the device token vector — the
+        dual-device twin of the in-pool ``emit`` scatter."""
+        from repro.models import handoff_row
+        max_len = self.max_len
+
+        def build():
+            def fn(pool, entry, toks, slot, first):
+                pool = handoff_row(pool, entry, slot, cap, max_len)
+                return pool, toks.at[slot].set(first)
+            return fn
+        return self._jitted(("handoff", pool_size, cap), build,
+                            donate=(0, 2))
+
+    # -- elastic binding (HEG affinity / backpressure / hit fallbacks) --------
+    def _stage_for(self, req: Request, seq_start: int) -> bool:
+        """Decide (once, stickily) whether this request prefills on the
+        prefill device or co-locates on the decode device."""
+        rid = req.id
+        dec = self._stage_decision.get(rid)
+        if dec is not None:
+            return dec
+        stage = self.dual_device
+        if stage and self._hit.get(rid, 0) > 0:
+            stage = False
+            self.colocated_hits += 1
+        if stage and len(self._staged) >= self.prefill_inflight_max:
+            stage = False
+            self.colocated_backpressure += 1
+        if stage and self.heg is not None:
+            # affinity/ETC fallback: co-locate only when the HEG prices the
+            # prefill lane MEANINGFULLY worse (>5%) for this tail — the
+            # tables put the two lanes within float noise of each other for
+            # most shapes, and staging is the default the overlap pays for
+            tail = max(req.prompt_len - seq_start, 1)
+            if self.heg.prefill_time_estimate(tail, "npu") > \
+                    1.05 * self.heg.prefill_time_estimate(tail, "igpu"):
+                stage = False
+                self.colocated_affinity += 1
+        self._stage_decision[rid] = stage
+        if stage:
+            self._staged.add(rid)
+            self.staged_prefills += 1
+            self.prefill_inflight_peak = max(self.prefill_inflight_peak,
+                                             len(self._staged))
+        return stage
+
+    # -- staged prefill drive -------------------------------------------------
+    def _upload_prompt_pf(self, req: Request):
+        """Pow-2-padded prompt tokens resident on the PREFILL device
+        (the decode-device twin lives in ``_tok_dev``)."""
+        rid = req.id
+        buf = self._tok_dev_pf.get(rid)
+        if buf is None:
+            np = self._np
+            toks = np.asarray(req.tokens, np.int32).reshape(1, -1)
+            pad = np.zeros((1, _next_pow2(max(toks.shape[1], 1))), np.int32)
+            pad[:, :toks.shape[1]] = toks
+            buf = self._tok_dev_pf[rid] = self._jax.device_put(
+                pad, self.prefill_device)
+        return buf
+
+    def _ensure_staged_at(self, req: Request, seq_start: int):
+        """Staging cache positioned at ``seq_start`` — rebuilt (replaying
+        the already-prefetched prefix) after a discard-style preemption
+        reset the scheduler's chunk progress.  Reuses the ``_scratch``
+        bookkeeping so every teardown path already covers it."""
+        from repro.models import init_cache
+        rid = req.id
+        if rid in self._scratch and self._scratch_pos[rid] == seq_start:
+            return
+        jax = self._jax
+        if self._staging_free:
+            cache = self._call(self._staged_reset_fn(),
+                               self._staging_free.pop(),
+                               rid=rid, stage="prefill")
+            self.prefill_device_calls += 1
+        else:
+            with jax.default_device(self.prefill_device):
+                cache = init_cache(self.cfg, self.params, 1, self.max_len,
+                                   self.dtype, kv_dtype=self._kv_dtype_arg)
+            # device_put is a no-op when default_device already placed it
+            cache = jax.device_put(cache, self.prefill_device)
+        self._scratch[rid] = cache
+        self._scratch_pos[rid] = 0
+        self._nxt_dev.pop(rid, None)
+        if seq_start > 0:
+            self._run_staged(req, 0, seq_start)
+
+    def _run_staged(self, req: Request, start: int, n: int):
+        if n <= 0:  # zero-length chunk: nothing ran, ``nxt`` never exists
+            return
+        rid = req.id
+        jnp = self._jnp
+        buf = self._upload_prompt_pf(req)
+        pos = start
+        for size in _pow2_buckets(n):
+            fn = self._staged_extend_fn(size, buf.shape[1])
+            nxt, self._scratch[rid] = self._call(
+                fn, self._params_pf, self._scratch[rid], buf,
+                jnp.int32(pos), rid=rid, stage="prefill")
+            self.prefill_device_calls += 1
+            pos += size
+        self._scratch_pos[rid] = pos
+        self.kv_bytes_prefill += n * self._kv_token_bytes
+        self.prefill_forward_tokens += n
+        if pos >= req.prompt_len:
+            # first output token stays ON the prefill device: the one host
+            # sync per prefill happens at the handoff, never per chunk
+            self._nxt_dev[rid] = nxt
+
+    def prefill_chunk(self, req: Request, seq_start: int, tokens: int,
+                      now: float) -> None:
+        if req.tokens is None or req.id in self._quarantined:
+            return
+        if not self._stage_for(req, seq_start):
+            super().prefill_chunk(req, seq_start, tokens, now)
+            return
+        self._track_prefill(req.id)
+        try:
+            self._ensure_staged_at(req, seq_start)
+            self._run_staged(req, seq_start, tokens)
+        except FaultError as e:
+            self._record_flow_fault(req, e, "prefill")
+
+    # -- KV handoff (prefill device -> decode pool) ---------------------------
+    def _prefill_done(self, req: Request, now: float) -> None:
+        rid = req.id
+        if rid not in self._staged:
+            self._stage_decision.pop(rid, None)
+            return super()._prefill_done(req, now)
+        jax, jnp = self._jax, self._jnp
+        nxt = self._nxt_dev.pop(rid, None)
+        cache = self._scratch.pop(rid, None)
+        self._scratch_pos.pop(rid, None)
+        self._staged.discard(rid)
+        self._stage_decision.pop(rid, None)
+        if req.tokens is None or nxt is None or cache is None:
+            # staged prefill made entirely of zero-length chunks: no
+            # program ran, no pool slot was ever bound — nothing to hand off
+            return
+        # bound the transfer to the prompt's pow-2 ring prefix (prefill
+        # positions never wrap: prompt_len <= max_len by engine contract)
+        cap = min(_next_pow2(max(req.prompt_len, 1)), self.max_len)
+        entry = cache
+        if cap < self.max_len:
+            entry = self._call(self._staged_trunc_fn(cap), cache,
+                               rid=rid, stage="prefill")
+        # async dispatch: both puts ENQUEUE transfers behind the prefill
+        # device's compute chain — nothing here blocks the decode queue,
+        # and the install below orders after them by data dependency
+        entry = jax.device_put(entry, self.decode_device)
+        first_dev = jax.device_put(nxt, self.decode_device)
+        # the staging cache is NOT consumed by the transfer (device_put
+        # and truncation both copy): recycle it for the next staged
+        # prefill instead of paying a fresh init_cache
+        if len(self._staging_free) < self.prefill_inflight_max:
+            self._staging_free.append(cache)
+        if rid not in self._slot:
+            self._alloc_slot(rid)
+        slot = self._slot[rid]
+        fn = self._handoff_fn(self.pool_slots, cap)
+        self._pool, self._toks = self._call(
+            fn, self._pool, entry, self._toks, jnp.int32(slot), first_dev,
+            rid=rid, stage="prefill")
+        self.handoff_device_calls += 1
+        self.kv_bytes_handoff += cap * self._kv_token_bytes
+        # the ONE host sync of this prefill: waits on the prefill device's
+        # dependency chain only (decode segments keep their own queue)
+        first = int(nxt)
+        self.host_syncs += 1
+        self.prefill_host_syncs += 1
+        self._slot_pos[slot] = req.prompt_len
+        # donor indexing mirrors the in-pool branch (same wrap gate), so
+        # staged prompts land on the decode pool as prefix sources too
+        if self._prefix is not None \
+                and req.prompt_len + req.max_new_tokens <= self.max_len:
+            path, evicted = self._prefix.insert(_prompt_key(req))
+            for node in path:
+                self._set_source(node, ("slot", slot))
+            for node in evicted:
+                self._set_source(node, None)
+        self._last[rid] = first
+        self._texts[rid] = [first]
+        self._emit(req, first)
+
+    def _drop_flow_state(self, rid: int) -> None:
+        # mid-prefill abort / quarantine / release of a staged flow: the
+        # staging cache rides in _scratch (cleared by super), the rest here
+        self._staged.discard(rid)
+        self._stage_decision.pop(rid, None)
+        self._tok_dev_pf.pop(rid, None)
+        super()._drop_flow_state(rid)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update({
+            "dual_device": self.dual_device,
+            "prefill_device": str(self.prefill_device),
+            "decode_device": str(self.decode_device),
+            "staged_prefills": self.staged_prefills,
+            "prefill_inflight_peak": self.prefill_inflight_peak,
+            "handoff_device_calls": self.handoff_device_calls,
+            "kv_bytes_handoff": self.kv_bytes_handoff,
+            "colocated_hits": self.colocated_hits,
+            "colocated_backpressure": self.colocated_backpressure,
+            "colocated_affinity": self.colocated_affinity,
+        })
+        return out

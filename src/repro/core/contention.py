@@ -8,7 +8,8 @@ Fig. 3 ordering).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional
 
 
 class MemoryPressureEstimator:
@@ -26,6 +27,60 @@ class MemoryPressureEstimator:
     @property
     def pressure(self) -> float:
         return sum(self._active.values())
+
+    @property
+    def active(self) -> Dict[str, float]:
+        """Snapshot of the currently-registered kernels (copy)."""
+        return dict(self._active)
+
+    def rates(self) -> List[float]:
+        """Co-execution progress rates of the registered kernels, in
+        insertion order (the §6.4 model applied to the live set)."""
+        return co_execution_rates(self._active.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class CoExecutionCalibration:
+    """Measured (or modeled) prefill/decode mutual-interference factors.
+
+    ``prefill_slowdown`` / ``decode_slowdown`` are >= 1.0 multipliers on a
+    stage's standalone time when the two stages overlap.  The scheduler's
+    prefill-ETC and piggyback-horizon estimates consume these; the neutral
+    default (1.0, 1.0) keeps every scheduling decision — and therefore the
+    sim==real trace invariant — bit-identical to the uncalibrated path.
+    """
+    prefill_slowdown: float = 1.0
+    decode_slowdown: float = 1.0
+
+    @classmethod
+    def neutral(cls) -> "CoExecutionCalibration":
+        return cls()
+
+    @classmethod
+    def from_rates(cls, prefill_bw: float,
+                   decode_bw: float) -> "CoExecutionCalibration":
+        """Calibration from the §6.4 bandwidth model (no measurement)."""
+        rp, rd = co_execution_rates([prefill_bw, decode_bw])
+        return cls(prefill_slowdown=1.0 / max(rp, 1e-9),
+                   decode_slowdown=1.0 / max(rd, 1e-9))
+
+    @classmethod
+    def from_backend_stats(
+            cls, stats: Mapping[str, float],
+            default: Optional["CoExecutionCalibration"] = None,
+    ) -> "CoExecutionCalibration":
+        """Calibration from a backend ``stats()`` dict: prefer the measured
+        overlapped-vs-solo decode slowdown when the run co-executed enough
+        segments to have one; otherwise fall back to the bandwidth model
+        (or ``default``)."""
+        measured = stats.get("co_execution_decode_slowdown_measured")
+        model = default or cls.from_rates(
+            stats.get("prefill_bw_util", 0.35),
+            stats.get("decode_bw_util", 0.85))
+        if measured is None or measured <= 0.0:
+            return model
+        return cls(prefill_slowdown=model.prefill_slowdown,
+                   decode_slowdown=max(float(measured), 1.0))
 
 
 def co_execution_rates(bw_utils: Iterable[float]) -> list:

@@ -110,7 +110,14 @@ class RealAgentXPUEngine(AgentXPUEngine):
     fused decode run the generated token block is fetched once with
     per-token ``on_token`` callbacks replaying from it
     (``max_fused_steps=1`` restores the per-iteration path;
-    ``in_pool_prefill=False`` the scratch+bind prefill)."""
+    ``in_pool_prefill=False`` the scratch+bind prefill).
+
+    ``dual_device`` (DESIGN.md §14) selects stage-decoupled execution —
+    prefill on a second JAX device, decode + KV pool on device 0, async
+    KV handoff at ``prefill_done``.  ``None`` (default) auto-enables iff
+    two devices are visible; ``True`` forces the dual backend (co-located
+    fallback when only one device exists); ``False`` pins the
+    single-device backend."""
 
     def __init__(self, cfg: ModelConfig, params,
                  hw: HardwareProfile = INTEL_CORE_ULTRA_5_125H,
@@ -130,12 +137,20 @@ class RealAgentXPUEngine(AgentXPUEngine):
                  isolate_flow_faults: bool = True,
                  strict_invariants: Optional[bool] = None,
                  faults=None,
+                 dual_device: Optional[bool] = None,
+                 prefill_device=None,
+                 prefill_inflight_max: int = 8,
+                 contention_calibration=None,
                  **sched_kw):
         # abortable_runs / decode_segment_steps reach BOTH sides of the seam:
         # the scheduler's plan-truncation arithmetic must mirror the
         # backend's lazy segment launches (DESIGN.md §8).  pool_slots_max
         # likewise: the scheduler's admission ladder and the backend's
         # AllocationFault backstop enforce the same cap (§12).
+        if contention_calibration is not None:
+            # explicit config, not runtime feedback: a sim engine given the
+            # same calibration replays identical decisions (DESIGN.md §14)
+            sched_kw["contention_calibration"] = contention_calibration
         super().__init__(cfg, hw, scheduler,
                          max_fused_steps=max_fused_steps,
                          abortable_runs=abortable_runs,
@@ -143,8 +158,18 @@ class RealAgentXPUEngine(AgentXPUEngine):
                          pool_slots_max=pool_slots_max,
                          admission_queue_len=admission_queue_len,
                          **sched_kw)
-        from repro.core.backend import JaxRealBackend
-        self.backend = JaxRealBackend(
+        from repro.core.backend import DualDeviceBackend, JaxRealBackend
+        if dual_device is None:
+            # auto: stage-decoupled execution iff a second device exists
+            import jax
+            dual_device = len(jax.devices()) >= 2
+        backend_cls = DualDeviceBackend if dual_device else JaxRealBackend
+        backend_kw = {}
+        if dual_device:
+            backend_kw = dict(prefill_device=prefill_device,
+                              prefill_inflight_max=prefill_inflight_max,
+                              heg=self.heg)
+        self.backend = backend_cls(
             cfg, params, pool_slots=pool_slots or self.heg.B_max,
             max_len=max_len, dtype=dtype, device_resident=device_resident,
             in_pool_prefill=in_pool_prefill, abortable_runs=abortable_runs,
@@ -160,7 +185,8 @@ class RealAgentXPUEngine(AgentXPUEngine):
             # failure model (DESIGN.md §12): bounded pool, per-flow fault
             # quarantine, deterministic fault injection
             pool_slots_max=pool_slots_max,
-            isolate_flow_faults=isolate_flow_faults, faults=faults)
+            isolate_flow_faults=isolate_flow_faults, faults=faults,
+            **backend_kw)
         # default SLO for human-facing flows: reactive requests submitted
         # without their own deadline inherit this (seconds from arrival)
         self.deadline_s = deadline_s

@@ -20,7 +20,8 @@ from collections import deque
 from typing import Dict, List, Optional
 
 from repro.core.backend import ExecutionBackend, SimBackend
-from repro.core.contention import MemoryPressureEstimator
+from repro.core.contention import (CoExecutionCalibration,
+                                   MemoryPressureEstimator)
 from repro.core.faults import AdmissionRejected
 from repro.core.heg import HEG, HEGNode, KernelKind
 from repro.core.preemption import ReqContext
@@ -55,7 +56,9 @@ class SchedulerBase:
                  max_fused_steps: int = 32, abortable_runs: bool = True,
                  decode_segment_steps: int = 8,
                  pool_slots_max: Optional[int] = None,
-                 admission_queue_len: int = 8):
+                 admission_queue_len: int = 8,
+                 contention_calibration:
+                 Optional[CoExecutionCalibration] = None):
         self.heg = heg
         self.hw = heg.hw
         self.rt_queue: deque = deque()  # reactive req ids
@@ -64,7 +67,19 @@ class SchedulerBase:
         self.decode_ready: List[int] = []
         self.running: Dict[str, Optional[RunningKernel]] = {
             ln: None for ln in self.lanes}
+        # live-kernel bandwidth ledger (§6.4): _start registers each
+        # dispatched kernel's bw_util under its lane, on_complete retires
+        # it, and the dispatch gate reads the aggregate — the same quantity
+        # the old per-gate sum computed, now maintained incrementally and
+        # observable between dispatches
         self.pressure = MemoryPressureEstimator()
+        # measured (or modeled) prefill/decode mutual interference feeding
+        # the piggyback-horizon slack model.  An explicit config input —
+        # NEVER runtime-measured in place — so a sim scheduler given the
+        # same calibration makes bit-identical decisions (trace invariant);
+        # the neutral default changes nothing at all
+        self.contention_cal = contention_calibration \
+            or CoExecutionCalibration.neutral()
         self.b_max = b_max or heg.B_max
         self.done: List[Request] = []
         self.backend: ExecutionBackend = backend or SimBackend()
@@ -395,6 +410,7 @@ class SchedulerBase:
 
     def on_complete(self, rk: RunningKernel, now: float):
         self.running[rk.lane] = None
+        self.pressure.remove(rk.lane)
         self.trace.append((rk.node.kind.value, tuple(rk.req_ids), now))
         if rk.is_decode_batch:
             self.backend.decode_iteration(
@@ -462,6 +478,7 @@ class SchedulerBase:
     def _start(self, rk: RunningKernel, now: float) -> RunningKernel:
         rk.started = now
         self.running[rk.lane] = rk
+        self.pressure.add(rk.lane, rk.bw_util)
         if rk.is_decode_batch:
             self._maybe_fuse(rk, now)
         else:
@@ -560,13 +577,16 @@ class AgentXpuScheduler(SchedulerBase):
                  max_fused_steps: int = 32, abortable_runs: bool = True,
                  decode_segment_steps: int = 8,
                  pool_slots_max: Optional[int] = None,
-                 admission_queue_len: int = 8):
+                 admission_queue_len: int = 8,
+                 contention_calibration:
+                 Optional[CoExecutionCalibration] = None):
         super().__init__(heg, b_max=b_max, backend=backend,
                          max_fused_steps=max_fused_steps,
                          abortable_runs=abortable_runs,
                          decode_segment_steps=decode_segment_steps,
                          pool_slots_max=pool_slots_max,
-                         admission_queue_len=admission_queue_len)
+                         admission_queue_len=admission_queue_len,
+                         contention_calibration=contention_calibration)
         self.enable_backfill = enable_backfill
         self.enable_contention = enable_contention
         self.tau_low = tau_low
@@ -581,8 +601,7 @@ class AgentXpuScheduler(SchedulerBase):
     def _gate(self, cand: RunningKernel, now: float, reactive: bool) -> bool:
         if not self.enable_contention:
             return True
-        others = [rk.bw_util for rk in self.running.values() if rk]
-        if not others:
+        if not any(self.running.values()):
             return True  # empty SoC: WaitForSlot would deadlock, just run
         if self._reactive_active() is None and not any(
                 rk and any(self.ctx[r].req.priority == Priority.REACTIVE
@@ -596,8 +615,10 @@ class AgentXpuScheduler(SchedulerBase):
         # proactive NPU prefill under reactive iGPU decode)...
         if cand.bw_util < 0.35:
             return True
-        # ...while memory-intensive kernels are separated temporally
-        p_new = sum(others) + cand.bw_util
+        # ...while memory-intensive kernels are separated temporally; the
+        # aggregate comes from the pressure ledger _start/on_complete keep
+        # in lockstep with ``running``, so the decision is unchanged
+        p_new = self.pressure.pressure + cand.bw_util
         if p_new > self.tau_high:
             return reactive  # high pressure: serialize, reactive only
         if p_new > self.tau_low and not reactive:
@@ -781,12 +802,21 @@ class AgentXpuScheduler(SchedulerBase):
                     self.ctx[o].prefill_done for o in others):
                 # a decode-ready request is waiting to join: no commitment
                 return 1
-            slack = min(self.ctx[o].etc() for o in others)
+            # contention calibration (§6.4): under overlap the joiner's
+            # prefill runs SLOWER (more slack than its standalone ETC
+            # claims) and each piggybacked decode iteration runs slower
+            # too — both corrections push the horizon toward what actually
+            # fits before the join.  Neutral (1.0, 1.0) reproduces the
+            # uncalibrated arithmetic bit-for-bit.
+            cal = self.contention_cal
+            slack = min(self.ctx[o].etc() for o in others) \
+                * cal.prefill_slowdown
+            t_eff = t_iter * cal.decode_slowdown
             seg = self.decode_segment_steps
             # cap BEFORE rounding down to whole segments: the committed
             # plan must end on an abort-segment boundary even when
             # max_fused_steps is not a segment multiple
-            n = min(steps, int(slack / max(t_iter, 1e-9)),
+            n = min(steps, int(slack / max(t_eff, 1e-9)),
                     self.max_fused_steps)
             steps = (n // seg) * seg  # whole segments only; 0 -> no fusion
             if steps > 1:

@@ -12,16 +12,39 @@ import jax
 from jax.sharding import Mesh
 
 
+class MeshDeviceError(RuntimeError):
+    """Raised when the local device list cannot satisfy a mesh shape.
+
+    Carries ``requested`` / ``available`` so callers (the dual-device
+    backend's co-located fallback, launch scripts) can branch on capacity
+    instead of parsing a numpy reshape message.
+    """
+
+    def __init__(self, requested: int, available: int, what: str):
+        self.requested = requested
+        self.available = available
+        super().__init__(
+            f"{what} needs {requested} device(s) but only {available} "
+            f"visible — set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={requested} (CPU) or run on a host with enough accelerators")
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 single-pod ("data","model") or 2x16x16 ("pod","data","model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        # a short device list must never silently reshape (the old
+        # fallback produced a cryptic numpy error — or worse, on an exact
+        # divisor, a mesh of the wrong machines)
+        raise MeshDeviceError(n, len(devices), "make_production_mesh")
     try:
         return jax.make_mesh(shape, axes)
     except ValueError:
-        # device count != prod(shape) (e.g. 512 placeholders, 256-chip mesh)
-        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        # device count > prod(shape) (e.g. 512 placeholders, 256-chip mesh)
+        devs = np.asarray(devices[:n]).reshape(shape)
         return Mesh(devs, axes)
 
 
@@ -29,3 +52,28 @@ def make_host_mesh() -> Mesh:
     """1x1 mesh on the real local device (smoke tests / examples)."""
     devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
     return Mesh(devs, ("data", "model"))
+
+
+def make_dual_device_mesh() -> Mesh:
+    """1-D 2-device ("stage",) mesh for stage-decoupled execution:
+    device 0 owns decode (and the KV pool), device 1 owns prefill.
+
+    Raises :class:`MeshDeviceError` when fewer than two devices are
+    visible — callers fall back to co-located single-device execution.
+    """
+    devices = jax.devices()
+    if len(devices) < 2:
+        raise MeshDeviceError(2, len(devices), "make_dual_device_mesh")
+    devs = np.asarray(devices[:2])
+    return Mesh(devs, ("stage",))
+
+
+def dual_stage_devices():
+    """(decode_device, prefill_device) from :func:`make_dual_device_mesh`.
+
+    Decode keeps device 0 — the device every single-device pool already
+    lives on, so enabling dual mode never migrates existing state.
+    """
+    mesh = make_dual_device_mesh()
+    flat = list(mesh.devices.flat)
+    return flat[0], flat[1]

@@ -101,6 +101,21 @@ def main(argv=None):
                     help="with --real: legacy fault handling — an on_token "
                          "hook exception tears down the whole run instead "
                          "of quarantining just the faulting flow")
+    ap.add_argument("--no-dual-device", action="store_true",
+                    help="with --real: pin the single-device backend even "
+                         "when a second JAX device is visible (the "
+                         "serialized baseline of BENCH_hetero.json); "
+                         "default auto-enables stage-decoupled prefill/"
+                         "decode iff two devices exist (DESIGN.md §14)")
+    ap.add_argument("--prefill-device", type=int, default=None,
+                    help="with --real: index into jax.devices() to run "
+                         "staged prefill on (default: device 1 when "
+                         "present).  The decode device — and the KV pool — "
+                         "always stays on device 0")
+    ap.add_argument("--prefill-inflight-max", type=int, default=8,
+                    help="with --real: bound on concurrently staged "
+                         "prefills; arrivals past it co-locate on the "
+                         "decode device (elastic binding backpressure)")
     ap.add_argument("--strict-invariants", action="store_true",
                     help="with --real: audit slot/refcount/pin accounting "
                          "after every event-loop turn and raise "
@@ -158,7 +173,11 @@ def main(argv=None):
             deadline_s=None if args.deadline_ms is None
             else args.deadline_ms / 1000.0,
             isolate_flow_faults=not args.no_isolate_flow_faults,
-            strict_invariants=True if args.strict_invariants else None)
+            strict_invariants=True if args.strict_invariants else None,
+            dual_device=False if args.no_dual_device else None,
+            prefill_device=None if args.prefill_device is None
+            else jax.devices()[args.prefill_device],
+            prefill_inflight_max=args.prefill_inflight_max)
         from repro.core.engine import stream_printer
         on_token = stream_printer() if args.stream else None
         for r in reqs:
@@ -192,6 +211,26 @@ def main(argv=None):
                   f"{st['kv_bytes_prefix_copied']} KV bytes copied, "
                   f"{st['prefix_store_entries']} store entries, "
                   f"{st['prefix_promotions']} donor promotions")
+            if st.get("dual_device"):
+                print(f"[real] dual device: prefill on "
+                      f"{st['prefill_device']}, decode on "
+                      f"{st['decode_device']}, {st['staged_prefills']} "
+                      f"staged prefills ({st['prefill_inflight_peak']} peak "
+                      f"in flight), {st['handoff_device_calls']} handoffs "
+                      f"({st['kv_bytes_handoff']} KV bytes), co-located: "
+                      f"{st['colocated_hits']} prefix-hit / "
+                      f"{st['colocated_backpressure']} backpressure / "
+                      f"{st['colocated_affinity']} affinity")
+            slowdown = st["co_execution_decode_slowdown_measured"]
+            print(f"[real] contention: peak pressure "
+                  f"{st['contention_pressure_peak']:.2f}, "
+                  f"{st['co_executed_segments']} co-executed decode "
+                  f"segments (rate {st['co_execution_rate']:.2f}), decode "
+                  f"slowdown under prefill: "
+                  f"{'n/a' if slowdown is None else f'{slowdown:.2f}x'} "
+                  f"measured / "
+                  f"{st['co_execution_decode_slowdown_model']:.2f}x "
+                  f"modeled")
             cap = st["pool_slots_max"]
             print(f"[real] failure model: pool cap "
                   f"{'unbounded' if cap is None else cap} "

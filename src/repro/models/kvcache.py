@@ -415,6 +415,26 @@ def paste_prefix(pool, entry, dst, hit, hit_cap, entry_alloc, full):
     return write_row_slice(pool, view, dst, 0, eff)
 
 
+def handoff_row(pool, entry, slot, entry_alloc, full):
+    """Install a staged prefill row into the decode pool (dual-device KV
+    handoff, DESIGN.md §14): ``entry`` is a :func:`truncate_rings` view of
+    a batch-1 staging cache whose prefill ran to completion on the prefill
+    device, already ``device_put`` onto the pool's device.
+
+    ``reset_row`` first invalidates the previous occupant — ``slot_pos``
+    beyond ``entry_alloc`` would otherwise leak the old row's ring overhang
+    into attention — then the entry's ring prefix, positions, and
+    recurrent/shift/conv state land verbatim via the same ring-indexed
+    scatter in-pool prefill uses.  Unlike :func:`paste_prefix` there is no
+    ``_mask_prefix_view``: the staging cache's ``slot_pos``/``pos`` are
+    already exact (every position below ``entry_alloc`` live, everything
+    else -1 from init), which also keeps the copy correct for windowed and
+    recurrent leaves the mask helper cannot shape."""
+    pool = reset_row(pool, slot)
+    eff = min(entry_alloc, full) if full else entry_alloc
+    return write_row_slice(pool, entry, slot, 0, eff)
+
+
 def copy_into_prefix(new, old, p):
     """Copy the ``p`` batch rows of pool cache ``old`` into the first ``p``
     rows of the (larger) freshly-initialized pool ``new`` (pool doubling).

@@ -44,6 +44,7 @@ SHARDS: Dict[str, List[str]] = {
         "test_loadgen.py",
         "test_models_smoke.py",
         "test_shards.py",
+        "test_dual_device.py",
     ],
 }
 

@@ -121,6 +121,31 @@ def test_reactive_abort_mid_run_token_exact():
     assert eng_base.output_tokens(50) == ref
 
 
+def test_reactive_abort_token_exact_dual_device():
+    """DESIGN.md §14: the dual-device engine — or its co-located fallback
+    when only one device is visible — preserves the §8 mid-run abort
+    exactness unchanged (staged prefill and KV handoff are backend-local,
+    so a reactive arriving mid-fused-run still truncates the plan and
+    every flow replays token-exactly)."""
+    cfg, params, eng = _tiny_real_engine(decode_segment_steps=2,
+                                         dual_device=True)
+    rng = np.random.default_rng(41)
+    n, out = 3, 24
+    pro = _mk_requests(cfg, rng, [0.0] * n, [12, 14, 16], out)
+    t_mid = _mid_decode_time(cfg, pro, frac=0.3, decode_segment_steps=2)
+    reactive = Request(
+        id=50, priority=Priority.REACTIVE, prompt_len=12, max_new_tokens=6,
+        arrival_time=t_mid, tokens=rng.integers(0, cfg.vocab_size, (1, 12)))
+    eng.serve(copy.deepcopy(pro + [reactive]))
+    assert eng.stats()["aborted_runs"] > 0
+    assert eng.backend.validate() == []
+    for r in pro:
+        ref = _reference_tokens(cfg, params, r.tokens, out, 128)
+        assert eng.output_tokens(r.id) == ref, f"req {r.id}"
+    assert eng.output_tokens(50) == _reference_tokens(
+        cfg, params, reactive.tokens, 6, 128)
+
+
 def test_sim_and_real_traces_identical_with_aborts():
     """Plan truncation is scheduler arithmetic, not backend behaviour: the
     kernel-completion trace of a sim run and a real run stays identical
